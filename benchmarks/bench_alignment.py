@@ -1,0 +1,39 @@
+"""Paper Fig 2: gradient alignment cos θ and dynamic rank R* trajectories
+during GRAFT training of a small LM (alignment should rise, permitting
+smaller ranks at fixed ε)."""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import csv_row
+from repro.launch.train import RunConfig, train
+
+
+def run() -> List[str]:
+    run_cfg = RunConfig(arch="minicpm-2b", steps=60, batch=16, seq=32,
+                        use_graft=True, graft_rset=(2, 4, 8), graft_eps=0.35,
+                        graft_refresh=4, lr=3e-3, log_every=1000)
+    report = train(run_cfg)
+    hist = report["history"]
+    aligns = np.asarray([h["alignment"] for h in hist])
+    ranks = np.asarray([h["rank"] for h in hist])
+    losses = np.asarray([h["loss"] for h in hist])
+    first, last = aligns[:10].mean(), aligns[-10:].mean()
+    rows = [
+        csv_row("alignment_early", 0.0, f"cos={first:.4f}"),
+        csv_row("alignment_late", 0.0, f"cos={last:.4f}"),
+        csv_row("alignment_mean_std", 0.0,
+                f"mu={aligns.mean():.3f};sigma={aligns.std():.3f}"),
+        csv_row("rank_mean_earlylate", 0.0,
+                f"early={ranks[:10].mean():.1f};late={ranks[-10:].mean():.1f}"),
+        csv_row("alignment_loss_drop", 0.0,
+                f"loss0={losses[0]:.3f};lossN={losses[-1]:.3f}"),
+    ]
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

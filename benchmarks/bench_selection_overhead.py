@@ -1,0 +1,72 @@
+"""Paper Table 7 / §3.3: empirical complexity of the selection machinery —
+Fast MaxVol must scale O(K·R²), the projection sweep O(R·d); wall-clock and
+compiled-FLOP scaling are both reported."""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row, time_call
+from repro.core.maxvol import fast_maxvol
+from repro.core.projection import prefix_projection_errors
+
+
+def _flops(fn, *args) -> float:
+    return jax.jit(fn).lower(*args).compile().cost_analysis().get("flops", 0.0)
+
+
+def run() -> List[str]:
+    rng = np.random.default_rng(0)
+    rows: List[str] = []
+
+    # K scaling at fixed R (expect ~linear)
+    R = 16
+    for K in (128, 256, 512, 1024):
+        V = jnp.asarray(rng.normal(size=(K, R)).astype(np.float32))
+        t = time_call(jax.jit(lambda v: fast_maxvol(v, R)), V)
+        f = _flops(lambda v: fast_maxvol(v, R), V)
+        rows.append(csv_row(f"maxvol_K{K}_R{R}", t, f"flops={f:.3e}"))
+
+    # R scaling at fixed K (expect ~quadratic)
+    K = 512
+    for R_ in (8, 16, 32, 64):
+        V = jnp.asarray(rng.normal(size=(K, R_)).astype(np.float32))
+        t = time_call(jax.jit(lambda v, r=R_: fast_maxvol(v, r)), V)
+        f = _flops(lambda v, r=R_: fast_maxvol(v, r), V)
+        rows.append(csv_row(f"maxvol_K{K}_R{R_}", t, f"flops={f:.3e}"))
+
+    # projection sweep: d scaling (expect ~linear in d at fixed R)
+    R_ = 32
+    for d in (256, 1024, 4096):
+        G = jnp.asarray(rng.normal(size=(d, R_)).astype(np.float32))
+        g = jnp.asarray(rng.normal(size=(d,)).astype(np.float32))
+        t = time_call(jax.jit(prefix_projection_errors), G, g)
+        f = _flops(prefix_projection_errors, G, g)
+        rows.append(csv_row(f"projsweep_d{d}_R{R_}", t, f"flops={f:.3e}"))
+
+    # derived scaling exponents (log-log slope)
+    def slope(names, var_vals):
+        ts = []
+        for n in names:
+            for r in rows:
+                if r.startswith(n + ","):
+                    ts.append(float(r.split(",")[1]))
+                    break                      # first match (names can repeat)
+        ts = np.asarray(ts)
+        return float(np.polyfit(np.log(var_vals), np.log(ts), 1)[0])
+
+    k_slope = slope([f"maxvol_K{k}_R16" for k in (128, 256, 512, 1024)],
+                    np.asarray([128, 256, 512, 1024]))
+    r_slope = slope([f"maxvol_K512_R{r}" for r in (8, 16, 32, 64)],
+                    np.asarray([8, 16, 32, 64]))
+    rows.append(csv_row("maxvol_scaling_exponents", 0.0,
+                        f"K_slope={k_slope:.2f};R_slope={r_slope:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

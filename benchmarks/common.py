@@ -1,0 +1,73 @@
+"""Shared benchmark utilities: timing, CSV rows, tiny-model training."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def time_call(fn: Callable, *args, repeats: int = 20, warmup: int = 3) -> float:
+    """Median wall-time (µs) of a jitted call (block_until_ready)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(times))
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"
+
+
+# --------------------------------------------------------------------------
+# tiny MLP classifier used by the paper-analog accuracy benchmarks
+# --------------------------------------------------------------------------
+
+def init_mlp(key, dim: int, hidden: int, classes: int):
+    k1, k2 = jax.random.split(key)
+    return {
+        "w1": jax.random.normal(k1, (dim, hidden)) * (dim ** -0.5),
+        "b1": jnp.zeros((hidden,)),
+        "w2": jax.random.normal(k2, (hidden, classes)) * (hidden ** -0.5),
+        "b2": jnp.zeros((classes,)),
+    }
+
+
+def mlp_logits(params, x):
+    h = jnp.tanh(x @ params["w1"] + params["b1"])
+    return h @ params["w2"] + params["b2"]
+
+
+def mlp_loss(params, x, y):
+    logits = mlp_logits(params, x)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+
+def mlp_per_example_loss(params, x, y):
+    logits = mlp_logits(params, x)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.take_along_axis(logp, y[:, None], axis=1)[:, 0]
+
+
+def accuracy(params, x, y) -> float:
+    pred = jnp.argmax(mlp_logits(params, x), axis=1)
+    return float(jnp.mean((pred == y).astype(jnp.float32)))
+
+
+def sgd_step(params, grads, lr):
+    return jax.tree_util.tree_map(lambda p, g: p - lr * g, params, grads)
+
+
+def train_flops_per_example(dim: int, hidden: int, classes: int) -> float:
+    """fwd+bwd ≈ 3× fwd matmul FLOPs (the CO₂/emissions proxy)."""
+    fwd = 2 * (dim * hidden + hidden * classes)
+    return 3.0 * fwd

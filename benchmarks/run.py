@@ -1,0 +1,60 @@
+"""Benchmark driver — one suite per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (us_per_call = 0.0 for accuracy-only
+rows). Suites: maxvol (Table 4 / Fig 4R), features (Table 3 / Fig 4L),
+fraction sweep (Tables 8/9/12/14 / Fig 3), alignment (Fig 2), selection
+overhead (Table 7), roofline (dry-run §Roofline, if artifacts exist).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--suite", default="all",
+                    choices=["all", "maxvol", "features", "fraction",
+                             "alignment", "overhead", "roofline"])
+    args = ap.parse_args(argv)
+
+    suites = []
+    if args.suite in ("all", "maxvol"):
+        from benchmarks import bench_maxvol
+        suites.append(("maxvol", bench_maxvol.run))
+    if args.suite in ("all", "features"):
+        from benchmarks import bench_features
+        suites.append(("features", bench_features.run))
+    if args.suite in ("all", "fraction"):
+        from benchmarks import bench_fraction_sweep
+        suites.append(("fraction", bench_fraction_sweep.run))
+    if args.suite in ("all", "alignment"):
+        from benchmarks import bench_alignment
+        suites.append(("alignment", bench_alignment.run))
+    if args.suite in ("all", "overhead"):
+        from benchmarks import bench_selection_overhead
+        suites.append(("overhead", bench_selection_overhead.run))
+    if args.suite in ("all", "roofline"):
+        from benchmarks import roofline
+        suites.append(("roofline", roofline.run))
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in suites:
+        t0 = time.time()
+        try:
+            for row in fn():
+                print(row, flush=True)
+            print(f"suite_{name}_wall,{(time.time()-t0)*1e6:.0f},ok", flush=True)
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+            print(f"suite_{name}_wall,{(time.time()-t0)*1e6:.0f},FAILED",
+                  flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,4 @@
+"""Atomic, resumable, elastic checkpointing with async writes."""
+from repro.checkpoint.checkpoint import CheckpointManager, EmergencySaver
+
+__all__ = ["CheckpointManager", "EmergencySaver"]

@@ -1,0 +1,67 @@
+"""Architecture registry: one module per assigned architecture.
+
+``get_config(arch_id)`` returns the exact published full config;
+``get_smoke_config(arch_id)`` a reduced same-family config for CPU tests.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+from repro.models.model import ModelConfig
+
+ARCHS = (
+    "stablelm_12b", "gemma2_27b", "qwen15_32b", "minicpm_2b",
+    "qwen3_moe_235b_a22b", "kimi_k2_1t_a32b", "rwkv6_7b",
+    "musicgen_medium", "internvl2_26b", "hymba_1_5b",
+)
+
+# canonical CLI ids (dashes) → module names
+_ALIASES: Dict[str, str] = {
+    "stablelm-12b": "stablelm_12b",
+    "gemma2-27b": "gemma2_27b",
+    "qwen1.5-32b": "qwen15_32b",
+    "qwen15-32b": "qwen15_32b",
+    "minicpm-2b": "minicpm_2b",
+    "qwen3-moe-235b-a22b": "qwen3_moe_235b_a22b",
+    "kimi-k2-1t-a32b": "kimi_k2_1t_a32b",
+    "rwkv6-7b": "rwkv6_7b",
+    "musicgen-medium": "musicgen_medium",
+    "internvl2-26b": "internvl2_26b",
+    "hymba-1.5b": "hymba_1_5b",
+    "hymba-1-5b": "hymba_1_5b",
+}
+
+
+def _module(arch: str):
+    name = _ALIASES.get(arch, arch.replace("-", "_").replace(".", "_"))
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch '{arch}'; available: {sorted(_ALIASES)}")
+    return importlib.import_module(f"repro.configs.{name}")
+
+
+def get_config(arch: str, **overrides) -> ModelConfig:
+    cfg = _module(arch).config()
+    if overrides:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, **overrides)
+    return cfg
+
+
+def get_smoke_config(arch: str, **overrides) -> ModelConfig:
+    cfg = _module(arch).smoke_config()
+    if overrides:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, **overrides)
+    return cfg
+
+
+def all_arch_ids():
+    return [a for a in _ALIASES if "_" not in a or a == "hymba-1.5b"] or list(_ALIASES)
+
+
+CANONICAL_IDS = (
+    "stablelm-12b", "gemma2-27b", "qwen1.5-32b", "minicpm-2b",
+    "qwen3-moe-235b-a22b", "kimi-k2-1t-a32b", "rwkv6-7b",
+    "musicgen-medium", "internvl2-26b", "hymba-1.5b",
+)

@@ -1,0 +1,13 @@
+"""GRAFT core: Fast MaxVol sampling, feature extraction, gradient-aligned
+dynamic rank selection (the paper's primary contribution)."""
+from repro.core.graft import GraftConfig, GraftState, graft_select, init_state, maybe_refresh
+from repro.core.maxvol import cross2d_maxvol, fast_maxvol, maxvol_classic
+from repro.core.projection import (cosine_alignment, prefix_projection_errors,
+                                   projection_error, select_rank)
+
+__all__ = [
+    "GraftConfig", "GraftState", "graft_select", "init_state", "maybe_refresh",
+    "fast_maxvol", "maxvol_classic", "cross2d_maxvol",
+    "prefix_projection_errors", "projection_error", "select_rank",
+    "cosine_alignment",
+]

@@ -1,0 +1,132 @@
+"""Subset-selection baselines the paper compares against (§2, §4).
+
+All operate per-iteration-batch on the same inputs GRAFT sees, so the
+fraction-sweep benchmark is apples-to-apples: Random, GradMatch (OMP),
+CRAIG (facility-location greedy), EL2N pre-scoring.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("k", "r"))
+def random_subset(key: jax.Array, k: int, r: int) -> Tuple[jax.Array, jax.Array]:
+    """Uniform random R-of-K (the paper's Table 14 baseline)."""
+    pivots = jax.random.permutation(key, k)[:r].astype(jnp.int32)
+    weights = jnp.full((r,), 1.0 / r, dtype=jnp.float32)
+    return pivots, weights
+
+
+@functools.partial(jax.jit, static_argnames=("r",))
+def gradmatch_omp(G: jax.Array, g_bar: jax.Array, r: int) -> Tuple[jax.Array, jax.Array]:
+    """GradMatch: orthogonal matching pursuit minimizing ‖ḡ − G_S w‖₂.
+
+    G: (d, K) per-sample gradients. Greedy: at each step add the column most
+    correlated with the residual, then refit weights by least squares on the
+    selected set. Returns (pivots (r,), weights (r,)).
+    """
+    d, K = G.shape
+    Gf = G.astype(jnp.float32)
+    g = g_bar.astype(jnp.float32)
+    col_norms = jnp.linalg.norm(Gf, axis=0) + 1e-12
+    Gn = Gf / col_norms[None, :]
+
+    def body(j, carry):
+        residual, pivots, selected = carry
+        scores = jnp.abs(Gn.T @ residual)
+        scores = jnp.where(selected > 0, -jnp.inf, scores)
+        pj = jnp.argmax(scores).astype(jnp.int32)
+        pivots = pivots.at[j].set(pj)
+        selected = selected.at[pj].set(1.0)
+        # refit on selected columns (mask trick keeps shapes static):
+        mask = selected                                     # (K,)
+        A = Gf * mask[None, :]                              # zero unselected cols
+        # ridge-regularized normal equations (stable for j < r fits)
+        gram = A.T @ A + 1e-6 * jnp.eye(K, dtype=jnp.float32)
+        w = jnp.linalg.solve(gram, A.T @ g) * mask
+        residual = g - A @ w
+        return residual, pivots, selected
+
+    pivots0 = jnp.zeros((r,), dtype=jnp.int32)
+    residual, pivots, selected = jax.lax.fori_loop(
+        0, r, body, (g, pivots0, jnp.zeros((K,), jnp.float32)))
+    # final weights: non-negative least squares on the selected set. NOTE:
+    # deliberately NOT normalized — OMP weights minimize ‖ḡ − G_S w‖ and
+    # normalizing would destroy the fit; training-use normalizes separately.
+    A = Gf * selected[None, :]
+    gram = A.T @ A + 1e-6 * jnp.eye(K, dtype=jnp.float32)
+    w_full = jnp.linalg.solve(gram, A.T @ g)
+    w = jnp.clip(w_full[pivots], 0.0)
+    return pivots, w
+
+
+@functools.partial(jax.jit, static_argnames=("r",))
+def craig_greedy(G: jax.Array, r: int) -> Tuple[jax.Array, jax.Array]:
+    """CRAIG: facility-location greedy on gradient similarity.
+
+    maximize F(S) = Σ_i max_{j∈S} sim(i, j); weights = cluster sizes / K.
+    """
+    d, K = G.shape
+    Gf = G.astype(jnp.float32)
+    norms = jnp.linalg.norm(Gf, axis=0) + 1e-12
+    S = (Gf.T @ Gf) / (norms[:, None] * norms[None, :])     # (K,K) cosine sim
+
+    def body(j, carry):
+        best_sim, pivots, selected = carry                  # best_sim: (K,)
+        gain = jnp.sum(jnp.maximum(S - best_sim[:, None], 0.0), axis=0)
+        gain = jnp.where(selected > 0, -jnp.inf, gain)
+        pj = jnp.argmax(gain).astype(jnp.int32)
+        best_sim = jnp.maximum(best_sim, S[:, pj])
+        return best_sim, pivots.at[j].set(pj), selected.at[pj].set(1.0)
+
+    best_sim0 = jnp.full((K,), -jnp.inf, dtype=jnp.float32)
+    _, pivots, selected = jax.lax.fori_loop(
+        0, r, body, (best_sim0, jnp.zeros((r,), jnp.int32), jnp.zeros((K,), jnp.float32)))
+    # weight each medoid by its cluster share
+    sim_sel = S[:, pivots]                                   # (K, r)
+    assign = jnp.argmax(sim_sel, axis=1)                     # nearest medoid
+    counts = jnp.sum(jax.nn.one_hot(assign, r, dtype=jnp.float32), axis=0)
+    w = counts / K
+    return pivots, w
+
+
+@functools.partial(jax.jit, static_argnames=("r",))
+def glister_greedy(G: jax.Array, g_val: jax.Array, r: int,
+                   eta: float = 0.1) -> Tuple[jax.Array, jax.Array]:
+    """GLISTER-online (greedy, first-order): maximize the one-step Taylor
+    approximation of validation log-likelihood gain.
+
+    Gain of adding sample i given selected set S:
+        ΔV(i | S) ≈ η · g_iᵀ (g_val − η · Σ_{j∈S} g_j)
+    G: (d, K) per-sample train gradients; g_val: (d,) validation gradient.
+    """
+    d, K = G.shape
+    Gf = G.astype(jnp.float32)
+    gv = g_val.astype(jnp.float32)
+
+    def body(j, carry):
+        acc, pivots, selected = carry           # acc = Σ_{j∈S} g_j
+        scores = Gf.T @ (gv - eta * acc)
+        scores = jnp.where(selected > 0, -jnp.inf, scores)
+        pj = jnp.argmax(scores).astype(jnp.int32)
+        acc = acc + Gf[:, pj]
+        return acc, pivots.at[j].set(pj), selected.at[pj].set(1.0)
+
+    _, pivots, _ = jax.lax.fori_loop(
+        0, r, body, (jnp.zeros((d,), jnp.float32),
+                     jnp.zeros((r,), jnp.int32), jnp.zeros((K,), jnp.float32)))
+    weights = jnp.full((r,), 1.0 / r, dtype=jnp.float32)
+    return pivots, weights
+
+
+@functools.partial(jax.jit, static_argnames=("r",))
+def el2n_topk(G: jax.Array, r: int) -> Tuple[jax.Array, jax.Array]:
+    """EL2N pre-scoring: keep the r samples with largest gradient norm."""
+    norms = jnp.linalg.norm(G.astype(jnp.float32), axis=0)
+    pivots = jnp.argsort(-norms)[:r].astype(jnp.int32)
+    weights = jnp.full((r,), 1.0 / r, dtype=jnp.float32)
+    return pivots, weights

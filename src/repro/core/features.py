@@ -1,0 +1,114 @@
+"""Feature extraction for GRAFT (paper §3.1 Step 1 and §13).
+
+Every extractor maps a batch matrix ``A ∈ R^{K×M}`` to ``V ∈ R^{K×R}`` with
+columns ordered by descending relevance (singular value / variance /
+non-Gaussianity), the precondition for Fast MaxVol's sequential pivoting.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def _flatten_batch(A: jax.Array) -> jax.Array:
+    return A.reshape(A.shape[0], -1).astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("rank",))
+def svd_features(A: jax.Array, rank: int) -> jax.Array:
+    """Top-``rank`` left singular vectors of A, scaled by singular values.
+
+    Uses the K×K Gram eigendecomposition when M > K (cheaper, same U).
+    Columns ordered by descending σ — satisfies Rel(1) ≥ … ≥ Rel(R).
+    """
+    A = _flatten_batch(A)
+    K, M = A.shape
+    if M >= K:
+        gram = A @ A.T                                 # (K,K)
+        evals, evecs = jnp.linalg.eigh(gram)           # ascending
+        evals = jnp.flip(evals, -1)[:rank]
+        U = jnp.flip(evecs, -1)[:, :rank]
+        sigma = jnp.sqrt(jnp.clip(evals, 0.0))
+    else:
+        U, s, _ = jnp.linalg.svd(A, full_matrices=False)
+        U, sigma = U[:, :rank], s[:rank]
+    return U * sigma[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("rank",))
+def pca_features(A: jax.Array, rank: int) -> jax.Array:
+    """PCA scores: mean-center then project onto top principal axes."""
+    A = _flatten_batch(A)
+    A = A - jnp.mean(A, axis=0, keepdims=True)
+    return svd_features(A, rank)
+
+
+@functools.partial(jax.jit, static_argnames=("rank", "iters"))
+def ica_features(A: jax.Array, rank: int, iters: int = 64,
+                 key: Optional[jax.Array] = None) -> jax.Array:
+    """FastICA (parallel, tanh contrast) on the whitened batch.
+
+    Components are re-ordered by descending excess kurtosis so that the
+    Rel-ordering precondition holds. Deterministic for a fixed key.
+    """
+    A = _flatten_batch(A)
+    K, _ = A.shape
+    X = A - jnp.mean(A, axis=0, keepdims=True)
+    # whiten via PCA in sample space
+    gram = X @ X.T / X.shape[1]
+    evals, evecs = jnp.linalg.eigh(gram)
+    evals = jnp.flip(evals, -1)[:rank]
+    E = jnp.flip(evecs, -1)[:, :rank]
+    Z = (E / jnp.sqrt(jnp.clip(evals, 1e-12))[None, :]).T  # (rank, K) whitened comps
+
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    W0 = jax.random.normal(key, (rank, rank), dtype=jnp.float32)
+
+    def sym_decorrelate(W):
+        # W ← (W Wᵀ)^{-1/2} W
+        s, u = jnp.linalg.eigh(W @ W.T)
+        inv_sqrt = u @ jnp.diag(1.0 / jnp.sqrt(jnp.clip(s, 1e-12))) @ u.T
+        return inv_sqrt @ W
+
+    def body(_, W):
+        Y = W @ Z                      # (rank, K) current sources
+        g = jnp.tanh(Y)
+        g_prime = 1.0 - g * g
+        W_new = (g @ Z.T) / Z.shape[1] - jnp.mean(g_prime, axis=1)[:, None] * W
+        return sym_decorrelate(W_new)
+
+    W = jax.lax.fori_loop(0, iters, body, sym_decorrelate(W0))
+    S = (W @ Z).T                      # (K, rank) sources
+    # order by descending excess kurtosis (non-Gaussianity = relevance)
+    kurt = jnp.mean(S ** 4, axis=0) / jnp.clip(jnp.mean(S ** 2, axis=0) ** 2, 1e-12) - 3.0
+    order = jnp.argsort(-jnp.abs(kurt))
+    return S[:, order]
+
+
+def encoder_features(apply_fn: Callable[..., jax.Array], params,
+                     batch, rank: int) -> jax.Array:
+    """Model-based embeddings (paper's AE / 'GRAFT Warm' path).
+
+    ``apply_fn(params, batch) → (K, E)`` pooled hiddens; we SVD-order them
+    down to ``rank`` columns so downstream MaxVol sees relevance-ordered
+    features regardless of the encoder's native basis.
+    """
+    H = apply_fn(params, batch)
+    return svd_features(H, rank)
+
+
+EXTRACTORS = {
+    "svd": svd_features,
+    "pca": pca_features,
+    "ica": ica_features,
+}
+
+
+def extract(mode: str, A: jax.Array, rank: int) -> jax.Array:
+    if mode not in EXTRACTORS:
+        raise KeyError(f"unknown feature extractor '{mode}' (have {list(EXTRACTORS)})")
+    return EXTRACTORS[mode](A, rank)

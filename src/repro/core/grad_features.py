@@ -1,0 +1,81 @@
+"""Per-sample gradient features for GRAFT's rank-selection stage.
+
+Two modes (DESIGN.md §3 hardware adaptation):
+
+* ``full``  — exact per-sample gradients of the whole parameter pytree via
+  ``vmap(grad)``. Matches Alg. 1 literally; used for small models and as the
+  oracle in tests.
+* ``probe`` — per-sample gradients restricted to a small probe parameter set
+  (classifier head / final norm), computed from one forward pass over frozen
+  trunk hiddens + a vmapped head-only backward. O(K·d_model) instead of
+  O(K·|Θ|); the standard last-layer approximation (GradMatch, CRAIG, BADGE).
+"""
+from __future__ import annotations
+
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _flatten_pytree(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.concatenate([jnp.ravel(l).astype(jnp.float32) for l in leaves])
+
+
+def per_sample_grads_full(loss_fn: Callable, params, batch) -> Tuple[jax.Array, jax.Array]:
+    """Exact per-sample gradient matrix G ∈ R^{d×K} + batch mean ḡ ∈ R^d.
+
+    ``loss_fn(params, example) → scalar``; ``batch`` is a pytree whose leaves
+    have a leading K axis.
+    """
+    grad_fn = jax.grad(loss_fn)
+
+    def one(example):
+        return _flatten_pytree(grad_fn(params, example))
+
+    G = jax.vmap(one)(batch)              # (K, d)
+    g_bar = jnp.mean(G, axis=0)
+    return G.T, g_bar
+
+
+def per_sample_grads_probe(head_loss_fn: Callable, probe_params, hiddens,
+                           labels) -> Tuple[jax.Array, jax.Array]:
+    """Per-sample gradients w.r.t. probe params only.
+
+    ``head_loss_fn(probe_params, hidden, label) → scalar`` for ONE example;
+    ``hiddens``: (K, ...) frozen trunk outputs; ``labels``: (K, ...).
+    Returns (G dxK, ḡ d).
+    """
+    grad_fn = jax.grad(head_loss_fn)
+
+    def one(h, y):
+        return _flatten_pytree(grad_fn(probe_params, h, y))
+
+    G = jax.vmap(one)(hiddens, labels)    # (K, d_probe)
+    g_bar = jnp.mean(G, axis=0)
+    return G.T, g_bar
+
+
+def logit_error_embeddings(logits: jax.Array, labels: jax.Array,
+                           hiddens: jax.Array) -> jax.Array:
+    """Cheap per-sample gradient embedding without any extra backward.
+
+    For softmax-CE the per-sample gradient w.r.t. the head input is
+    ``Wᵀ(p − y)``; we use the loss-weighted pooled hidden as a d_model-dim
+    surrogate: ``e_k = ℓ_k · mean_s h_{k,s}`` with ℓ the per-sample loss and
+    the residual error norm as the weight. Shapes: logits (K,S,V) or (K,V);
+    labels (K,S) or (K,); hiddens (K,S,E) or (K,E). Returns (K,E).
+    """
+    if logits.ndim == 2:
+        logits, labels, hiddens = logits[:, None, :], labels[:, None], hiddens[:, None, :]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    p = jnp.exp(logp)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=jnp.float32)
+    err = p - onehot                                       # (K,S,V)
+    err_norm = jnp.sqrt(jnp.sum(err * err, axis=-1))       # (K,S)
+    w = err_norm / (jnp.sum(err_norm, axis=-1, keepdims=True) + 1e-9)
+    pooled = jnp.einsum("ks,kse->ke", w, hiddens.astype(jnp.float32))
+    loss = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]  # (K,S)
+    scale = jnp.mean(loss, axis=-1, keepdims=True)
+    return pooled * scale

@@ -1,0 +1,88 @@
+"""Gradient projection error + dynamic rank selection (paper §3.2).
+
+Given the full-batch mean gradient ``ḡ`` and the per-sample gradient matrix
+``G ∈ R^{d×R}`` of the MaxVol-ordered candidates, the projection error at
+prefix rank ``r`` is ``d_r = ‖ḡ − P_r ḡ‖² / ‖ḡ‖²`` where ``P_r`` projects
+onto span of the first ``r`` columns. Because Fast MaxVol pivots are
+prefix-consistent, one modified-Gram-Schmidt sweep yields every candidate
+rank's error (Lemma 1: errors are the residual energies, monotone in r).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-12
+
+
+@jax.jit
+def prefix_projection_errors(G: jax.Array, g_bar: jax.Array) -> jax.Array:
+    """Normalized projection errors for every prefix rank 1..R.
+
+    ``G``: (d, R) per-sample gradients in MaxVol pivot order.
+    ``g_bar``: (d,) reference (full-batch mean) gradient.
+    Returns ``err`` of shape (R,), ``err[r-1] = ‖ḡ − P_r ḡ‖²/‖ḡ‖²`` — by
+    Lemma 1 equal to ``1 − ‖Q_rᵀ ĝ‖²`` with Q an orthonormal basis.
+    Monotone non-increasing in r.
+    """
+    d, R = G.shape
+    g_norm2 = jnp.sum(g_bar.astype(jnp.float32) ** 2)
+    g_hat = g_bar.astype(jnp.float32) / jnp.sqrt(g_norm2 + _EPS)
+
+    def body(carry, col):
+        basis_proj_g, Q = carry                    # captured energy, basis so far (d, R)
+        q = col
+        # orthogonalize against existing basis (two MGS passes for stability)
+        for _ in range(2):
+            q = q - Q @ (Q.T @ q)
+        nrm = jnp.sqrt(jnp.sum(q * q))
+        q = jnp.where(nrm > 1e-8, q / (nrm + _EPS), jnp.zeros_like(q))
+        Q = jnp.concatenate([Q[:, 1:], q[:, None]], axis=1)  # ring buffer append
+        captured = basis_proj_g + jnp.sum(q * g_hat) ** 2
+        err = 1.0 - captured
+        return (captured, Q), err
+
+    Q0 = jnp.zeros((d, R), dtype=jnp.float32)
+    (_, _), errs = jax.lax.scan(body, (jnp.float32(0.0), Q0),
+                                G.astype(jnp.float32).T)
+    return jnp.clip(errs, 0.0, 1.0)
+
+
+@functools.partial(jax.jit, static_argnames=("rset",))
+def select_rank(errors: jax.Array, rset: Tuple[int, ...], eps: float) -> Tuple[jax.Array, jax.Array]:
+    """Smallest candidate rank whose error ≤ eps (else the minimizing rank).
+
+    ``errors``: prefix errors of shape (R_max,). ``rset``: static ascending
+    candidate ranks. Returns ``(rank, err_at_rank)`` as traced scalars.
+    """
+    cand = jnp.asarray(rset, dtype=jnp.int32)
+    cand_err = errors[cand - 1]
+    ok = cand_err <= eps
+    any_ok = jnp.any(ok)
+    # first satisfying rank (rset ascending) or global argmin as fallback
+    first_ok = jnp.argmax(ok)            # first True (0 if none — masked below)
+    best = jnp.argmin(cand_err)
+    idx = jnp.where(any_ok, first_ok, best)
+    return cand[idx], cand_err[idx]
+
+
+@jax.jit
+def projection_error(G: jax.Array, g_bar: jax.Array) -> jax.Array:
+    """Single-rank normalized projection error ‖ḡ − G G† ḡ‖²/‖ḡ‖² via QR."""
+    Gf = G.astype(jnp.float32)
+    q, _ = jnp.linalg.qr(Gf, mode="reduced")
+    g = g_bar.astype(jnp.float32)
+    g_norm2 = jnp.sum(g * g) + _EPS
+    coeffs = q.T @ g
+    return jnp.clip(1.0 - jnp.sum(coeffs * coeffs) / g_norm2, 0.0, 1.0)
+
+
+@jax.jit
+def cosine_alignment(g_sub: jax.Array, g_bar: jax.Array) -> jax.Array:
+    """cos(subset mean gradient, full-batch mean gradient) — Fig. 2 metric."""
+    a = g_sub.astype(jnp.float32)
+    b = g_bar.astype(jnp.float32)
+    return jnp.sum(a * b) / (jnp.linalg.norm(a) * jnp.linalg.norm(b) + _EPS)

@@ -1,0 +1,5 @@
+"""Deterministic, host-sharded, resumable synthetic data pipelines."""
+from repro.data.pipeline import (DataConfig, SyntheticClassification,
+                                 SyntheticLM, batches)
+
+__all__ = ["DataConfig", "SyntheticLM", "SyntheticClassification", "batches"]

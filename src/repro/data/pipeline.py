@@ -1,0 +1,143 @@
+"""Deterministic synthetic data pipelines (no external datasets offline).
+
+Design goals that mirror a production loader:
+  * host-sharded: each data-parallel host generates only its slice of the
+    global batch (hash of (seed, step, global_example_index) — no host ever
+    materializes the global batch);
+  * resumable: iterator state is one integer (step) and rides in the
+    checkpoint manifest;
+  * learnable: sequences follow a hidden Markov chain over token clusters +
+    Zipfian unigrams, so models actually reduce loss and subset-selection
+    quality differences show up (a pure-uniform stream would make every
+    selection method look identical).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class DataConfig:
+    vocab_size: int = 1024
+    seq_len: int = 128
+    global_batch: int = 32
+    seed: int = 0
+    num_clusters: int = 16         # hidden-state count of the Markov source
+    cluster_stickiness: float = 0.8
+    # host sharding
+    num_hosts: int = 1
+    host_index: int = 0
+
+    @property
+    def local_batch(self) -> int:
+        assert self.global_batch % self.num_hosts == 0
+        return self.global_batch // self.num_hosts
+
+
+class SyntheticLM:
+    """Markov-over-clusters token source; __call__(step) -> local batch."""
+
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+        root = np.random.default_rng(cfg.seed)
+        C, V = cfg.num_clusters, cfg.vocab_size
+        # sticky transition matrix between clusters
+        trans = root.random((C, C)) + np.eye(C) * (
+            cfg.cluster_stickiness * C / (1 - cfg.cluster_stickiness + 1e-9))
+        self.trans = trans / trans.sum(1, keepdims=True)
+        # per-cluster Zipfian token distributions over disjoint-ish supports
+        ranks = np.arange(1, V + 1, dtype=np.float64)
+        zipf = 1.0 / ranks
+        self.cluster_tokens = []
+        for c in range(C):
+            perm = np.random.default_rng(cfg.seed * 1000 + c).permutation(V)
+            p = zipf[np.argsort(perm)]
+            self.cluster_tokens.append(p / p.sum())
+        self.cluster_tokens = np.stack(self.cluster_tokens)   # (C, V)
+        # precomputed CDFs: token sampling is a binary search, not a choice()
+        self._tok_cdf = np.cumsum(self.cluster_tokens, axis=1)
+        self._trans_cdf = np.cumsum(self.trans, axis=1)
+        self._step = 0
+
+    # ---- resumable iterator state ----
+    def state_dict(self) -> Dict[str, int]:
+        return {"step": self._step}
+
+    def load_state_dict(self, state: Dict[str, int]) -> None:
+        self._step = int(state["step"])
+
+    def batch_at(self, step: int) -> Dict[str, np.ndarray]:
+        """Deterministic batch for ``step`` (local shard only)."""
+        cfg = self.cfg
+        B, S = cfg.local_batch, cfg.seq_len
+        start = step * cfg.global_batch + cfg.host_index * B
+        tokens = np.empty((B, S + 1), dtype=np.int32)
+        V = cfg.vocab_size
+        for i in range(B):
+            # per-GLOBAL-example stream ⇒ identical data for any host count
+            # (elastic re-sharding keeps the byte-exact token stream)
+            g = np.random.default_rng((cfg.seed, 0x5EED, step, start + i))
+            u_tok = g.random(S + 1)
+            u_cl = g.random(S + 1)
+            c = int(g.integers(cfg.num_clusters))
+            for t in range(S + 1):
+                tokens[i, t] = min(np.searchsorted(self._tok_cdf[c], u_tok[t]), V - 1)
+                c = min(int(np.searchsorted(self._trans_cdf[c], u_cl[t])),
+                        cfg.num_clusters - 1)
+        return {"tokens": tokens[:, :-1], "labels": tokens[:, 1:]}
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        while True:
+            b = self.batch_at(self._step)
+            self._step += 1
+            yield b
+
+
+class SyntheticClassification:
+    """Gaussian-cluster classification set (paper's CIFAR/IMDB analog).
+
+    Fixed finite dataset (n examples) so fraction sweeps Ψ(f) make sense;
+    includes label noise + per-class difficulty so selection methods
+    differentiate.
+    """
+
+    def __init__(self, n: int = 4096, dim: int = 64, num_classes: int = 10,
+                 noise: float = 0.8, label_noise: float = 0.02, seed: int = 0,
+                 imbalance: float = 0.0):
+        g = np.random.default_rng(seed)
+        self.num_classes = num_classes
+        centers = g.normal(size=(num_classes, dim)) * 2.0
+        if imbalance > 0:
+            # Zipf-like class skew: random subsets miss rare classes, which is
+            # exactly the regime where diversity-seeking selection pays off
+            pcls = (1.0 / np.arange(1, num_classes + 1) ** imbalance)
+            pcls /= pcls.sum()
+            self.y = g.choice(num_classes, size=n, p=pcls).astype(np.int32)
+        else:
+            self.y = g.integers(num_classes, size=n).astype(np.int32)
+        scales = 0.5 + 1.5 * g.random(num_classes)           # per-class difficulty
+        self.x = (centers[self.y] +
+                  g.normal(size=(n, dim)) * noise * scales[self.y][:, None]
+                  ).astype(np.float32)
+        flip = g.random(n) < label_noise
+        self.y[flip] = g.integers(num_classes, size=flip.sum())
+
+    def split(self, test_fraction: float = 0.2, seed: int = 1):
+        g = np.random.default_rng(seed)
+        n = len(self.y)
+        perm = g.permutation(n)
+        k = int(n * (1 - test_fraction))
+        tr, te = perm[:k], perm[k:]
+        return (self.x[tr], self.y[tr]), (self.x[te], self.y[te])
+
+
+def batches(x: np.ndarray, y: np.ndarray, batch_size: int, seed: int = 0
+            ) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
+    g = np.random.default_rng(seed)
+    n = len(y)
+    while True:
+        idx = g.choice(n, batch_size, replace=False)
+        yield x[idx], y[idx]

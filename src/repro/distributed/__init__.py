@@ -1,0 +1,2 @@
+"""Distributed runtime: logical-axis sharding, gradient compression,
+microbatching, pipeline-parallel experiments, straggler monitoring."""

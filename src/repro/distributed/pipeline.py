@@ -1,0 +1,78 @@
+"""Experimental GPipe-style pipeline parallelism over the "pod" axis.
+
+DESIGN.md §5 maps the 2-pod production mesh's pod axis to data parallelism
+(batch 256 ≥ 512 chips makes DP strictly better than a 2-stage pipeline's
+bubble). This module exists for >2-pod deployments where DP batch runs out:
+a shard_map+ppermute GPipe executor with the standard (S + M − 1)/M bubble.
+
+Mechanics: layers are partitioned into S contiguous stages (one per pod);
+each pipeline tick every stage applies its layers to its resident
+microbatch, then activations rotate one stage forward via
+``jax.lax.ppermute``. After S + M − 1 ticks all M microbatches have passed
+through all S stages. Stage-local layer weights never move.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def pipeline_forward(layer_fn: Callable, stage_params, x_micro: jax.Array,
+                     mesh: Mesh, axis: str = "pod") -> jax.Array:
+    """Run M microbatches through S pipeline stages.
+
+    layer_fn(params, x) -> x          one stage's computation
+    stage_params: pytree with leading (S,) stage axis, sharded over ``axis``
+    x_micro: (M, mb, ...) microbatches (replicated; stage 0 consumes them)
+    Returns (M, mb, ...) outputs as produced by the last stage.
+    """
+    S = mesh.shape[axis]
+    M = x_micro.shape[0]
+    ticks = S + M - 1
+
+    def per_stage(params_s, x_all):
+        # params_s: this stage's params (leading axis stripped by shard_map)
+        stage = jax.lax.axis_index(axis)
+        p_local = jax.tree_util.tree_map(lambda a: a[0], params_s)
+        # carries are device-varying (they hold per-stage state) — mark them
+        buf = jax.lax.pvary(jnp.zeros_like(x_all[0]), (axis,))    # (mb, …)
+        outs = jax.lax.pvary(jnp.zeros_like(x_all), (axis,))      # (M, mb, …)
+
+        def tick(t, carry):
+            buf, outs = carry
+            # stage 0 ingests microbatch t (if any remain)
+            feed = x_all[jnp.clip(t, 0, M - 1)]
+            buf = jnp.where(stage == 0,
+                            jnp.where(t < M, feed, jnp.zeros_like(feed)), buf)
+            buf = layer_fn(p_local, buf)
+            # last stage emits microbatch index t - (S - 1); masked update
+            # (a lax.cond would mix varying/invariant manual axes)
+            out_idx = t - (S - 1)
+            emit = jnp.logical_and(stage == S - 1, out_idx >= 0)
+            idx = jnp.clip(out_idx, 0, M - 1)
+            outs = outs.at[idx].set(jnp.where(emit, buf, outs[idx]))
+            # rotate activations forward one stage
+            buf = jax.lax.ppermute(
+                buf, axis, [(i, (i + 1) % S) for i in range(S)])
+            return buf, outs
+
+        _, outs = jax.lax.fori_loop(0, ticks, tick, (buf, outs))
+        # only the last stage holds real outputs; psum broadcasts them so
+        # every shard returns the identical (replicated) result
+        outs = jnp.where(stage == S - 1, outs, jnp.zeros_like(outs))
+        return jax.lax.psum(outs, axis)
+
+    specs_params = jax.tree_util.tree_map(lambda _: P(axis), stage_params)
+    fn = jax.shard_map(per_stage, mesh=mesh,
+                       in_specs=(specs_params, P()),
+                       out_specs=P())
+    return fn(stage_params, x_micro)
+
+
+def pipeline_bubble_fraction(num_stages: int, num_micro: int) -> float:
+    """Idle fraction of the GPipe schedule: (S−1)/(S+M−1)."""
+    return (num_stages - 1) / (num_stages + num_micro - 1)

@@ -1,0 +1,97 @@
+"""Pallas TPU flash attention (causal, optional sliding window + softcap).
+
+The jnp chunked-attention path (models/layers._chunked_attention) is the
+SPMD-dry-run reference; this kernel is the TPU fast path with the same
+online-softmax schedule but explicit VMEM residency:
+
+  grid = (BH, Sq // BLOCK_Q): each program owns one query tile. K/V for the
+  (b,h) stream stay VMEM-resident across the program's KV loop (budget-
+  guarded by the wrapper); scores exist only as a (BLOCK_Q, BLOCK_K) tile in
+  registers/VMEM. m/l/acc run in f32 for numerical parity with the oracle.
+
+For KV streams too large for VMEM the wrapper refuses — the production
+answer at 32k+ context is KV-tiling via a third grid axis, noted as future
+work (the jnp path covers those cells today).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int,
+                  causal: bool, window: Optional[int],
+                  softcap: Optional[float], scale: float):
+    """Blocks: q (1, BQ, Dh); k/v (1, T, Dh); o (1, BQ, Dh)."""
+    q = q_ref[0].astype(jnp.float32) * scale          # (BQ, Dh)
+    BQ = q.shape[0]
+    T = k_ref.shape[1]
+    q_offset = pl.program_id(1) * BQ
+
+    m0 = jnp.full((BQ,), -1e30, jnp.float32)
+    l0 = jnp.zeros((BQ,), jnp.float32)
+    acc0 = jnp.zeros_like(q)
+
+    def body(i, carry):
+        m, l, acc = carry
+        k = k_ref[0, pl.dslice(i * block_k, block_k), :].astype(jnp.float32)
+        v = v_ref[0, pl.dslice(i * block_k, block_k), :].astype(jnp.float32)
+        s = q @ k.T                                    # (BQ, BK)
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        q_pos = q_offset + jax.lax.iota(jnp.int32, BQ)[:, None]
+        k_pos = i * block_k + jax.lax.iota(jnp.int32, block_k)[None, :]
+        mask = jnp.ones_like(s, dtype=jnp.bool_)
+        if causal:
+            mask = jnp.logical_and(mask, k_pos <= q_pos)
+        if window is not None:
+            mask = jnp.logical_and(mask, k_pos > q_pos - window)
+        s = jnp.where(mask, s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l = l * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[:, None] + p @ v
+        return m_new, l, acc
+
+    m, l, acc = jax.lax.fori_loop(0, T // block_k, body, (m0, l0, acc0))
+    o_ref[0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "block_q", "block_k", "causal", "window", "softcap", "interpret"))
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
+                           block_q: int = 128, block_k: int = 128,
+                           causal: bool = True,
+                           window: Optional[int] = None,
+                           softcap: Optional[float] = None,
+                           interpret: bool = False) -> jax.Array:
+    """q: (BH, Sq, Dh); k/v: (BH, T, Dh) → (BH, Sq, Dh) in q dtype.
+
+    Pre-scaled by 1/sqrt(Dh). VMEM per program: 2·T·Dh f32 (K,V) +
+    3 q-tiles ⇒ guard at ~12 MB.
+    """
+    BH, Sq, Dh = q.shape
+    T = k.shape[1]
+    if Sq % block_q or T % block_k:
+        raise ValueError(f"Sq={Sq} % {block_q} or T={T} % {block_k} != 0")
+    if (2 * T * Dh + 3 * block_q * Dh) * 4 > 12 * 1024 * 1024:
+        raise ValueError("KV stream exceeds the single-program VMEM budget; "
+                         "use the jnp chunked path (or KV grid tiling, TBD)")
+    kernel = functools.partial(
+        _flash_kernel, block_k=block_k, causal=causal, window=window,
+        softcap=softcap, scale=1.0 / (Dh ** 0.5))
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, Dh), q.dtype),
+        in_specs=[pl.BlockSpec((1, block_q, Dh), lambda bh, iq: (bh, iq, 0)),
+                  pl.BlockSpec((1, T, Dh), lambda bh, iq: (bh, 0, 0)),
+                  pl.BlockSpec((1, T, Dh), lambda bh, iq: (bh, 0, 0))],
+        out_specs=pl.BlockSpec((1, block_q, Dh), lambda bh, iq: (bh, iq, 0)),
+        grid=(BH, Sq // block_q),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,49 @@
+"""Jit'd public wrappers over the Pallas kernels.
+
+On TPU these dispatch to the Mosaic-compiled kernels; on CPU (tests, the
+dry-run container) they run in ``interpret=True`` mode, executing the same
+kernel body in Python — bit-identical control flow, so the allclose tests
+against ``ref.py`` validate the TPU target logic.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import fast_maxvol as _fm
+from repro.kernels import projection_sweep as _ps
+from repro.kernels import rwkv_scan as _rw
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def fast_maxvol(V: jax.Array, rank: int) -> jax.Array:
+    """Pivot indices (rank,) — Pallas fast MaxVol."""
+    pivots, _ = _fm.fast_maxvol_pallas(V, rank, interpret=not _on_tpu())
+    return pivots
+
+
+def fast_maxvol_with_logvol(V: jax.Array, rank: int):
+    return _fm.fast_maxvol_pallas(V, rank, interpret=not _on_tpu())
+
+
+def projection_sweep(G: jax.Array, g_bar: jax.Array) -> jax.Array:
+    """Prefix projection errors (R,) — Pallas MGS sweep."""
+    return _ps.projection_sweep_pallas(G, g_bar, interpret=not _on_tpu())
+
+
+def rwkv_scan(r, k, v, w, u, chunk: int = 32) -> jax.Array:
+    """Chunked RWKV6 recurrence (BH, T, D) — Pallas state-resident scan."""
+    return _rw.rwkv_scan_pallas(r, k, v, w, u, chunk=chunk,
+                                interpret=not _on_tpu())
+
+
+def flash_attention(q, k, v, causal: bool = True, window=None, softcap=None,
+                    block_q: int = 128, block_k: int = 128):
+    """Pallas flash attention (BH, S, Dh) — TPU fast path."""
+    from repro.kernels import flash_attention as _fa
+    return _fa.flash_attention_pallas(q, k, v, block_q=block_q,
+                                      block_k=block_k, causal=causal,
+                                      window=window, softcap=softcap,
+                                      interpret=not _on_tpu())

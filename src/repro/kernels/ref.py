@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.maxvol import fast_maxvol as _fast_maxvol_core
+from repro.core.projection import prefix_projection_errors as _prefix_errors_core
+
+
+def fast_maxvol_ref(V: jax.Array, rank: int):
+    """Oracle = the core jnp implementation (itself validated against numpy
+    brute-force volume maximization in tests/test_maxvol.py)."""
+    return _fast_maxvol_core(V, rank)
+
+
+def projection_sweep_ref(G: jax.Array, g_bar: jax.Array) -> jax.Array:
+    return _prefix_errors_core(G, g_bar)
+
+
+def rwkv_chunk_ref(r, k, v, w, u):
+    """Oracle for the RWKV6 chunked-recurrence kernel: naive per-step scan.
+
+    Shapes (single head): r,k: (T, D); v: (T, D); w: (T, D) per-step decay in
+    (0,1); u: (D,) bonus. Returns (T, D) outputs. State S: (D, D).
+    """
+    T, D = r.shape
+
+    def step(S, inputs):
+        rt, kt, vt, wt = inputs
+        kv = jnp.outer(kt, vt)                       # (D, D)
+        out = rt @ (S + u[:, None] * kv)             # (D,)
+        S = S * wt[:, None] + kv
+        return S, out
+
+    S0 = jnp.zeros((D, D), dtype=jnp.float32)
+    _, outs = jax.lax.scan(step, S0, (r, k, v, w))
+    return outs
+
+
+def flash_attention_ref(q, k, v, causal=True, window=None, softcap=None):
+    """Dense-softmax oracle for the flash attention kernel.
+
+    q: (BH, Sq, Dh); k/v: (BH, T, Dh). Assumes queries align to the END of
+    the KV stream when Sq < T (decode-style), matching the kernel's absolute
+    positions q_pos = tile_offset + i.
+    """
+    import jax.numpy as jnp
+    BH, Sq, Dh = q.shape
+    T = k.shape[1]
+    s = jnp.einsum("bqd,btd->bqt", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / (Dh ** 0.5)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    q_pos = jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(T)[None, :]
+    mask = jnp.ones((Sq, T), bool)
+    if causal:
+        mask = mask & (k_pos <= q_pos)
+    if window is not None:
+        mask = mask & (k_pos > q_pos - window)
+    s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqt,btd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)

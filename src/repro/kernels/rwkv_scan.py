@@ -1,0 +1,71 @@
+"""Pallas TPU kernel for the RWKV6 recurrence (assigned arch rwkv6-7b).
+
+Beyond-paper optimization (DESIGN.md §5): the WKV recurrence
+``S_t = diag(w_t)·S_{t-1} + k_t v_tᵀ;  o_t = r_t·(S_{t-1} + diag(u)·k_t v_tᵀ)``
+is latency-bound when evaluated step-by-step from HBM. We tile time into
+chunks: the (D×D) state lives in a VMEM scratch accumulator across the whole
+sequence (grid iterates chunks sequentially on TPU), while r/k/v/w stream in
+as (CHUNK, D) blocks — one HBM round-trip per chunk instead of per step.
+
+Grid: (BH, T // CHUNK) — batch×head parallel dim first (TPU iterates the
+trailing grid dim innermost, so the state scratch carries across chunks of
+one (b,h) stream and resets when program_id(1) == 0).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rwkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, state_ref):
+    """Blocks: r/k/v/w (1, C, D); u (1, D); o (1, C, D); state (D, D) scratch."""
+    chunk = pl.program_id(1)
+
+    @pl.when(chunk == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    r = r_ref[0]                       # (C, D)
+    k = k_ref[0]
+    v = v_ref[0]
+    w = w_ref[0]
+    u = u_ref[0]                       # (D,)
+    C, D = r.shape
+
+    def step(t, S):
+        kt, vt, rt, wt = k[t], v[t], r[t], w[t]
+        kv = kt[:, None] * vt[None, :]                 # (D, D) outer product
+        o_ref[0, t, :] = rt @ (S + u[:, None] * kv)
+        return S * wt[:, None] + kv
+
+    state_ref[...] = jax.lax.fori_loop(0, C, step, state_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rwkv_scan_pallas(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+                     u: jax.Array, chunk: int = 32,
+                     interpret: bool = False) -> jax.Array:
+    """r/k/v/w: (BH, T, D); u: (BH, D). Returns outputs (BH, T, D) f32.
+
+    VMEM per program: 4·C·D (streams) + D² (state) + C·D (out) f32 —
+    with C=32, D=64: ~57 KB. T must be divisible by ``chunk``.
+    """
+    BH, T, D = r.shape
+    if T % chunk:
+        raise ValueError(f"T={T} not divisible by chunk={chunk}")
+    seq_spec = pl.BlockSpec((1, chunk, D), lambda bh, c: (bh, c, 0))
+    return pl.pallas_call(
+        _rwkv_kernel,
+        out_shape=jax.ShapeDtypeStruct((BH, T, D), jnp.float32),
+        in_specs=[seq_spec, seq_spec, seq_spec, seq_spec,
+                  pl.BlockSpec((1, D), lambda bh, c: (bh, 0))],
+        out_specs=seq_spec,
+        scratch_shapes=[pltpu.VMEM((D, D), jnp.float32)],
+        grid=(BH, T // chunk),
+        interpret=interpret,
+    )(r.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32),
+      w.astype(jnp.float32), u.astype(jnp.float32))

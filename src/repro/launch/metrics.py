@@ -1,0 +1,69 @@
+"""Training telemetry: JSONL metrics stream + throughput/MFU tracking.
+
+Production habits kept: append-only JSONL (crash-safe, greppable), host-side
+only (no device sync beyond the metrics already materialized by the step),
+analytic FLOPs/step so MFU is reported against the 197 TFLOP/s bf16 peak.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Any, Dict, Optional
+
+PEAK_FLOPS_PER_CHIP = 197e12
+
+
+def train_step_flops(num_params: int, tokens_per_step: int,
+                     remat: bool = True) -> float:
+    """6·N·D (+2·N·D recompute under full remat)."""
+    base = 6.0 * num_params * tokens_per_step
+    return base * (8.0 / 6.0) if remat else base
+
+
+class MetricsLogger:
+    def __init__(self, path: Optional[str] = None, num_chips: int = 1,
+                 flops_per_step: Optional[float] = None):
+        self.path = path
+        self.num_chips = num_chips
+        self.flops_per_step = flops_per_step
+        self._f = open(path, "a", buffering=1) if path else None
+        self._last_t: Optional[float] = None
+        self.tokens_seen = 0
+
+    def log(self, step: int, metrics: Dict[str, Any],
+            tokens: int = 0) -> Dict[str, Any]:
+        now = time.time()
+        row = {"step": step, "time": now, **{k: float(v)
+                                             for k, v in metrics.items()}}
+        if tokens:
+            self.tokens_seen += tokens
+            row["tokens_seen"] = self.tokens_seen
+        if self._last_t is not None:
+            dt = now - self._last_t
+            row["step_time_s"] = dt
+            if tokens and dt > 0:
+                row["tokens_per_s"] = tokens / dt
+            if self.flops_per_step and dt > 0:
+                row["mfu"] = (self.flops_per_step /
+                              (dt * self.num_chips * PEAK_FLOPS_PER_CHIP))
+        self._last_t = now
+        if self._f:
+            self._f.write(json.dumps(row) + "\n")
+        return row
+
+    def close(self):
+        if self._f:
+            self._f.close()
+
+
+def read_metrics(path: str):
+    out = []
+    if not os.path.exists(path):
+        return out
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                out.append(json.loads(line))
+    return out

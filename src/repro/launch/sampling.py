@@ -1,0 +1,42 @@
+"""Token sampling for the serving path: temperature / top-k / top-p.
+
+Pure function of (logits, key) — jit-safe, static knobs, batch-first.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("temperature", "top_k", "top_p"))
+def sample_tokens(key: jax.Array, logits: jax.Array,
+                  temperature: float = 1.0,
+                  top_k: Optional[int] = None,
+                  top_p: Optional[float] = None) -> jax.Array:
+    """logits: (B, V) → token ids (B,) int32.
+
+    temperature == 0.0 → greedy. top_k and top_p compose (k first, then p).
+    """
+    if temperature == 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits.astype(jnp.float32) / max(temperature, 1e-6)
+    B, V = logits.shape
+
+    if top_k is not None and top_k < V:
+        kth = jnp.sort(logits, axis=-1)[:, V - top_k][:, None]
+        logits = jnp.where(logits < kth, -jnp.inf, logits)
+
+    if top_p is not None and top_p < 1.0:
+        sorted_logits = jnp.sort(logits, axis=-1)[:, ::-1]
+        probs = jax.nn.softmax(sorted_logits, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        # keep the smallest prefix with cumulative mass ≥ top_p
+        cutoff_idx = jnp.sum((cum < top_p).astype(jnp.int32), axis=-1)
+        cutoff_val = jnp.take_along_axis(sorted_logits,
+                                         cutoff_idx[:, None], axis=-1)
+        logits = jnp.where(logits < cutoff_val, -jnp.inf, logits)
+
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

@@ -1,0 +1,263 @@
+"""Assigned input-shape cells + abstract (no-allocation) input specs.
+
+Every (arch × shape) cell resolves to: which step function to lower, the
+ShapeDtypeStruct inputs, their shardings, and shape-specific sharding-rule
+overrides (e.g. KV-cache sequence sharding for decode cells).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs as config_lib
+from repro.core.graft import GraftConfig
+from repro.distributed import sharding as sh
+from repro.launch import steps as steps_lib
+from repro.models import decode as decode_lib
+from repro.models import model as model_lib
+from repro.optim import OptimizerConfig
+
+SHAPES: Dict[str, Dict[str, Any]] = {
+    "train_4k": {"kind": "train", "seq": 4096, "batch": 256},
+    "prefill_32k": {"kind": "prefill", "seq": 32768, "batch": 32},
+    "decode_32k": {"kind": "decode", "seq": 32768, "batch": 128},
+    "long_500k": {"kind": "decode", "seq": 524288, "batch": 1},
+}
+
+# long_500k requires sub-quadratic sequence handling: only the recurrent /
+# bounded-window archs run it (DESIGN.md §4).
+LONG_CONTEXT_ARCHS = ("rwkv6-7b", "hymba-1.5b")
+
+# per-shape logical-rule overrides
+SHAPE_RULES: Dict[str, Dict[str, Any]] = {
+    "train_4k": {},
+    "prefill_32k": {},
+    "decode_32k": {"act_kv_seq": "model", "act_kv_heads": None},
+    "long_500k": {"act_kv_seq": ("data", "model"), "act_kv_heads": None},
+}
+
+# named sharding presets (hillclimb levers; see EXPERIMENTS.md §Perf).
+# "fsdp": pure ZeRO-3 — batch over every mesh axis, no TP/SP on activations,
+# weights stay fully sharded and are all-gathered just-in-time. The right
+# regime for dense models when per-chip batch ≥ 1 sequence: collective bytes
+# become O(params) instead of O(activations × TP degree).
+RULE_PRESETS: Dict[str, Dict[str, Any]] = {
+    "default": {},
+    "fsdp": {
+        "act_batch": ("pod", "data", "model"),
+        "act_res_seq": None, "act_q_seq": None, "act_heads": None,
+        "act_kv_heads": None, "act_mlp": None, "act_vocab": None,
+        "act_experts": "model",      # EP unchanged (MoE weights can't gather)
+    },
+    # head-TP attention (Megatron classic) instead of seq-sharded attention
+    "head_tp": {"act_q_seq": None, "act_kv_heads": "model"},
+}
+
+# archs whose optimizer must use factored second moments to fit HBM
+_ADAFACTOR_ARCHS = ("kimi-k2-1t-a32b",)
+
+
+def cell_is_supported(arch: str, shape: str) -> Tuple[bool, str]:
+    if shape == "long_500k" and arch not in LONG_CONTEXT_ARCHS:
+        return False, ("full-attention KV over 524288 positions — "
+                       "sub-quadratic archs only (DESIGN.md §4)")
+    return True, ""
+
+
+def all_cells():
+    for arch in config_lib.CANONICAL_IDS:
+        for shape in SHAPES:
+            yield arch, shape
+
+
+def default_train_config(arch: str, use_graft: bool = True,
+                         batch: int = 256) -> steps_lib.TrainConfig:
+    opt_name = "adafactor" if arch in _ADAFACTOR_ARCHS else "adamw"
+    schedule = "wsd" if arch == "minicpm-2b" else "cosine"
+    rset = tuple(r for r in (16, 32, 64, 128) if r <= batch // 2)
+    if not rset:
+        rset = (max(1, batch // 4), max(2, batch // 2))
+    graft = GraftConfig(rset=rset, eps=0.25, refresh_every=1,
+                        feature_mode="svd", grad_mode="probe") if use_graft else None
+    return steps_lib.TrainConfig(
+        optimizer=OptimizerConfig(name=opt_name, schedule=schedule,
+                                  total_steps=10_000, warmup_steps=200,
+                                  learning_rate=3e-4),
+        graft=graft)
+
+
+# ---------------------------------------------------------------------------
+# abstract inputs
+# ---------------------------------------------------------------------------
+
+def batch_specs(mcfg: model_lib.ModelConfig, batch: int, seq: int) -> Dict[str, jax.ShapeDtypeStruct]:
+    i32 = jnp.int32
+    if mcfg.family == "audio":
+        return {
+            "frame_embeds": jax.ShapeDtypeStruct((batch, seq, mcfg.d_model), mcfg.dtype),
+            "labels": jax.ShapeDtypeStruct((batch, seq), i32),
+        }
+    if mcfg.family == "vlm":
+        s_text = seq - mcfg.num_patches
+        return {
+            "patch_embeds": jax.ShapeDtypeStruct((batch, mcfg.num_patches, mcfg.d_model), mcfg.dtype),
+            "tokens": jax.ShapeDtypeStruct((batch, s_text), i32),
+            "labels": jax.ShapeDtypeStruct((batch, s_text), i32),
+        }
+    return {
+        "tokens": jax.ShapeDtypeStruct((batch, seq), i32),
+        "labels": jax.ShapeDtypeStruct((batch, seq), i32),
+    }
+
+
+def batch_logical(batch_tree):
+    return jax.tree_util.tree_map(
+        lambda leaf: ("act_batch",) + tuple(None for _ in leaf.shape[1:]),
+        batch_tree)
+
+
+def _cache_leaf_logical(path, leaf):
+    names = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+    nd = len(leaf.shape)
+    under_layers = "layers" in names
+    base = ("layers",) if under_layers else ()
+    body_nd = nd - len(base)
+    leaf_name = names[-1]
+    if leaf_name in ("k", "v"):
+        lg = ("act_batch", "act_kv_seq", "act_kv_heads", None)
+    elif leaf_name == "wkv":
+        lg = ("act_batch", "act_heads", None, None)
+    elif leaf_name == "shift":
+        lg = ("act_batch", None, None)
+    elif leaf_name == "ssm":
+        lg = ("act_batch", "act_heads", None, None)
+    elif leaf_name == "index":
+        lg = ()
+    else:
+        lg = tuple(None for _ in range(body_nd))
+    return base + lg
+
+
+def cache_logical(abstract_cache):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(abstract_cache)
+    return jax.tree_util.tree_unflatten(
+        treedef, [_cache_leaf_logical(p, l) for p, l in flat])
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    kind: str                      # train | prefill | decode
+    mcfg: model_lib.ModelConfig
+    step_fn: Any                   # (state/params, ...) jittable
+    abstract_args: Tuple[Any, ...]
+    arg_logical: Tuple[Any, ...]
+    rules: Dict[str, Any]
+    donate: Tuple[int, ...] = ()
+
+
+def build_cell(arch: str, shape: str, *, variant: str = "graft",
+               num_layers_override: Optional[int] = None,
+               scan_override: Optional[bool] = None,
+               rule_overrides: Optional[Dict[str, Any]] = None,
+               smoke: bool = False, exact_cost: bool = False) -> Cell:
+    """Construct the lowered-artifact description for one cell.
+
+    variant: 'graft' | 'baseline' (train cells only).
+    num_layers_override/scan_override: roofline L1/L2 unrolled delta trick.
+    exact_cost: disable attn/loss chunking (their internal lax.scans are
+    counted once by XLA cost analysis, silently hiding ~T/chunk of the
+    FLOPs/bytes) — used ONLY for the roofline cost compiles; math identical.
+    """
+    ok, why = cell_is_supported(arch, shape)
+    if not ok:
+        raise ValueError(f"cell {arch}×{shape} unsupported: {why}")
+    info = SHAPES[shape]
+    overrides: Dict[str, Any] = {}
+    if not smoke:
+        # production memory defaults: flash-style KV chunking + seq-chunked CE
+        overrides["attn_chunk"] = 0 if exact_cost else 1024
+        overrides["loss_chunk"] = 0 if exact_cost else 512
+    if num_layers_override is not None:
+        overrides["num_layers"] = num_layers_override
+        # keep kimi's single dense-first layer inside the override budget
+        base = config_lib.get_config(arch)
+        if base.first_k_dense >= num_layers_override:
+            overrides["first_k_dense"] = 0
+    if scan_override is not None:
+        overrides["scan_layers"] = scan_override
+    mcfg = (config_lib.get_smoke_config(arch, **overrides) if smoke
+            else config_lib.get_config(arch, **overrides))
+    rules = dict(SHAPE_RULES[shape])
+    if rule_overrides:
+        rules.update(rule_overrides)
+
+    B, S = info["batch"], info["seq"]
+    if smoke:
+        B, S = max(4, B // 64), min(S, 64)
+
+    if info["kind"] == "train":
+        use_graft = variant in ("graft", "subset", "select")
+        tcfg = default_train_config(arch, use_graft=use_graft, batch=B)
+        batch = batch_specs(mcfg, B, S)
+        abstract_state = jax.eval_shape(
+            lambda key: steps_lib.init_train_state(mcfg, tcfg, key, B),
+            jax.ShapeDtypeStruct((2,), jnp.uint32))
+        state_logical = steps_lib.train_state_logical(mcfg, tcfg, abstract_state)
+        step = steps_lib.make_train_step(
+            mcfg, tcfg, kind=variant if variant in
+            ("graft", "baseline", "subset", "select") else None)
+        return Cell(arch, shape, "train", mcfg, step,
+                    (abstract_state, batch),
+                    (state_logical, batch_logical(batch)), rules, donate=(0,))
+
+    if info["kind"] == "prefill":
+        batch = batch_specs(mcfg, B, S)
+
+        def step(params, b):
+            return steps_lib.prefill_step(mcfg, params, b, S)
+
+        abstract_params = jax.eval_shape(
+            lambda key: model_lib.init_params(mcfg, key),
+            jax.ShapeDtypeStruct((2,), jnp.uint32))
+        p_logical = model_lib.params_logical(mcfg, abstract_params)
+        return Cell(arch, shape, "prefill", mcfg, step,
+                    (abstract_params, batch),
+                    (p_logical, batch_logical(batch)), rules)
+
+    # decode
+    abstract_params = jax.eval_shape(
+        lambda key: model_lib.init_params(mcfg, key),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+    p_logical = model_lib.params_logical(mcfg, abstract_params)
+    abstract_cache = jax.eval_shape(
+        lambda: decode_lib.init_cache(mcfg, B, S))
+    c_logical = cache_logical(abstract_cache)
+    tokens = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+
+    def step(params, cache, tok):
+        return steps_lib.decode_step(mcfg, params, cache, tok)
+
+    return Cell(arch, shape, "decode", mcfg, step,
+                (abstract_params, abstract_cache, tokens),
+                (p_logical, c_logical,
+                 ("act_batch", None)), rules, donate=(1,))
+
+
+def input_specs(arch: str, shape: str = "train_4k"):
+    """ShapeDtypeStruct stand-ins for every model input of a cell (the
+    dry-run contract: weak-type-correct, shardable, no device allocation).
+
+    Training shapes return the batch tree {tokens/labels/embeds...}; decode
+    shapes return (params, cache, tokens) stand-ins via build_cell.
+    """
+    info = SHAPES[shape]
+    mcfg = config_lib.get_config(arch)
+    if info["kind"] in ("train", "prefill"):
+        return batch_specs(mcfg, info["batch"], info["seq"])
+    cell = build_cell(arch, shape, variant="serve")
+    return cell.abstract_args

@@ -1,0 +1,260 @@
+"""Jittable train / serve steps with GRAFT integrated as a first-class
+feature, plus abstract state construction for the no-allocation dry-run.
+
+Three step families:
+  * ``baseline_train_step``  — full-batch fwd+bwd+update (the paper's "Full")
+  * ``graft_train_step``     — selection forward (features + grad embeddings
+    + Fast MaxVol + rank choice) followed by subset fwd+bwd+update. With
+    ``refresh_every == 1`` the selection is unconditional (dry-run worst
+    case); otherwise a ``lax.cond`` reuses the previous subset (paper Alg. 1).
+  * ``prefill_step`` / ``decode_step`` — serving paths.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import graft as graft_lib
+from repro.core.features import svd_features
+from repro.core.grad_features import logit_error_embeddings
+from repro.distributed.sharding import constrain
+from repro.models import decode as decode_lib
+from repro.models import model as model_lib
+from repro.optim import OptimizerConfig, make_optimizer
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: OptimizerConfig = OptimizerConfig()
+    graft: Optional[graft_lib.GraftConfig] = None
+    probe_positions: int = 256      # positions per sequence for grad embeddings
+                                    # (0 = all; the paper's K×M regime is tiny)
+    microbatches: int = 1           # >1: sequential accumulation (§Perf memory lever)
+
+    @property
+    def use_graft(self) -> bool:
+        return self.graft is not None
+
+
+# ---------------------------------------------------------------------------
+# state
+# ---------------------------------------------------------------------------
+
+def init_train_state(mcfg: model_lib.ModelConfig, tcfg: TrainConfig,
+                     key: jax.Array, batch_size: int) -> Dict[str, PyTree]:
+    params = model_lib.init_params(mcfg, key)
+    opt = make_optimizer(tcfg.optimizer)
+    state: Dict[str, PyTree] = {
+        "params": params,
+        "opt": opt.init(params),
+        "step": jnp.int32(0),
+    }
+    if tcfg.use_graft:
+        state["graft"] = graft_lib.init_state(tcfg.graft, batch_size)
+    return state
+
+
+def _replicated_logical(tree):
+    return jax.tree_util.tree_map(
+        lambda leaf: tuple(None for _ in getattr(leaf, "shape", ())), tree)
+
+
+def opt_state_logical(opt_name: str, p_logical, abstract_params):
+    """Logical-axis tree for the optimizer state (mirrors param sharding;
+    Adafactor's factored moments drop the reduced axis)."""
+    if opt_name in ("sgd", "lion"):
+        return {"m": p_logical}
+    if opt_name == "adamw":
+        return {"m": p_logical, "v": p_logical}
+    if opt_name == "adafactor":
+        def factored(lg, leaf):
+            if len(leaf.shape) >= 2:
+                return {"vr": tuple(lg[:-1]), "vc": tuple(lg[:-2]) + (lg[-1],)}
+            return {"v": tuple(lg)}
+        return {"v": jax.tree_util.tree_map(
+            factored, p_logical, abstract_params,
+            is_leaf=lambda x: isinstance(x, tuple))}
+    raise ValueError(opt_name)
+
+
+def train_state_logical(mcfg, tcfg: TrainConfig, abstract_state):
+    p_logical = model_lib.params_logical(mcfg, abstract_state["params"])
+    out = {
+        "params": p_logical,
+        "opt": opt_state_logical(tcfg.optimizer.name, p_logical,
+                                 abstract_state["params"]),
+        "step": (),
+    }
+    if "graft" in abstract_state:
+        out["graft"] = _replicated_logical(abstract_state["graft"])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# GRAFT selection inputs at LM scale (DESIGN.md §3 hardware adaptation)
+# ---------------------------------------------------------------------------
+
+def selection_inputs(mcfg, tcfg: TrainConfig, params, batch
+                     ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One full-batch forward → (V (K,R_max), G (d,K), ḡ (d,)).
+
+    Features = relevance-ordered SVD of mean-pooled final hiddens (the
+    paper's encoder/'Warm' feature path); gradient embeddings = per-example
+    probe gradients from the softmax error signal (no extra backward).
+    """
+    h, mask = model_lib.forward_hiddens(mcfg, params, batch)
+    h = jax.lax.stop_gradient(h)
+    S = h.shape[1]
+    stride = max(1, S // tcfg.probe_positions) if tcfg.probe_positions else 1
+    hp = h[:, ::stride, :]
+    labels = batch["labels"]
+    if labels.shape[1] != S:                       # vlm: pad vision positions
+        pad = S - labels.shape[1]
+        labels = jnp.concatenate(
+            [jnp.zeros((labels.shape[0], pad), labels.dtype), labels], axis=1)
+    lp = labels[:, ::stride]
+    logits = model_lib.logits_from_hiddens(mcfg, params, hp)
+    emb = logit_error_embeddings(logits, lp, hp)   # (K, E) f32
+    emb = constrain(emb, ("act_batch", None))
+    # the K×R feature/gradient matrices are tiny — replicate for MaxVol
+    pooled = jnp.sum(h.astype(jnp.float32) * mask[..., None], axis=1) / \
+        jnp.maximum(jnp.sum(mask, axis=1), 1.0)[:, None]
+    V = svd_features(pooled, tcfg.graft.r_max)
+    G = emb.T                                      # (d=E, K)
+    g_bar = jnp.mean(emb, axis=0)
+    return V, G, g_bar
+
+
+def _take_batch(batch, pivots: jax.Array, k_global: int):
+    def take(x):
+        if hasattr(x, "shape") and x.ndim >= 1 and x.shape[0] == k_global:
+            sub = jnp.take(x, pivots, axis=0)
+            return constrain(sub, ("act_batch",) + (None,) * (sub.ndim - 1))
+        return x
+    return jax.tree_util.tree_map(take, batch)
+
+
+# ---------------------------------------------------------------------------
+# train steps
+# ---------------------------------------------------------------------------
+
+def baseline_train_step(mcfg, tcfg: TrainConfig, state, batch):
+    opt = make_optimizer(tcfg.optimizer)
+
+    if tcfg.microbatches > 1:
+        from repro.distributed.accumulate import accumulated_grads
+        loss_val, grads = accumulated_grads(
+            lambda p, mb: model_lib.loss_fn(mcfg, p, mb)[0],
+            state["params"], batch, tcfg.microbatches)
+        params, opt_state, metrics = opt.apply(
+            state["params"], grads, state["opt"], state["step"])
+        new_state = dict(state, params=params, opt=opt_state,
+                         step=state["step"] + 1)
+        return new_state, dict(metrics, loss=loss_val)
+
+    def loss(params):
+        return model_lib.loss_fn(mcfg, params, batch)
+
+    (loss_val, aux), grads = jax.value_and_grad(loss, has_aux=True)(state["params"])
+    params, opt_state, metrics = opt.apply(
+        state["params"], grads, state["opt"], state["step"])
+    new_state = dict(state, params=params, opt=opt_state, step=state["step"] + 1)
+    metrics = dict(metrics, loss=loss_val)
+    return new_state, metrics
+
+
+def graft_train_step(mcfg, tcfg: TrainConfig, state, batch):
+    """The paper's Algorithm 1 as one jitted step."""
+    gcfg = tcfg.graft
+    opt = make_optimizer(tcfg.optimizer)
+    k_global = jax.tree_util.tree_leaves(batch)[0].shape[0]
+
+    def do_select(_):
+        V, G, g_bar = selection_inputs(mcfg, tcfg, state["params"], batch)
+        return graft_lib.graft_select(gcfg, V, G, g_bar, state["step"])
+
+    if gcfg.refresh_every == 1:
+        graft_state = do_select(None)
+    else:
+        graft_state = jax.lax.cond(
+            state["step"] % gcfg.refresh_every == 0,
+            do_select,
+            lambda _: state["graft"]._replace(step=state["step"]),
+            None)
+
+    sub_batch = _take_batch(batch, graft_state.pivots, k_global)
+    weights = graft_state.weights                   # (R_max,) sum=1, 0 inactive
+
+    def loss(params):
+        pel = model_lib.per_example_loss(mcfg, params, sub_batch)
+        return jnp.sum(pel * weights)
+
+    loss_val, grads = jax.value_and_grad(loss)(state["params"])
+    params, opt_state, metrics = opt.apply(
+        state["params"], grads, state["opt"], state["step"])
+    new_state = dict(state, params=params, opt=opt_state,
+                     step=state["step"] + 1, graft=graft_state)
+    metrics = dict(metrics, loss=loss_val, rank=graft_state.rank,
+                   proj_error=graft_state.last_error,
+                   alignment=graft_state.alignment)
+    return new_state, metrics
+
+
+def subset_train_step(mcfg, tcfg: TrainConfig, state, batch):
+    """Alg. 1 'else' branch: steady-state GRAFT step between refreshes —
+    train on the STORED subset, no selection forward. This is the per-step
+    cost once the selection is amortized over S (the paper's S = 20–50)."""
+    opt = make_optimizer(tcfg.optimizer)
+    k_global = jax.tree_util.tree_leaves(batch)[0].shape[0]
+    graft_state = state["graft"]
+    sub_batch = _take_batch(batch, graft_state.pivots, k_global)
+    weights = graft_state.weights
+
+    def loss(params):
+        pel = model_lib.per_example_loss(mcfg, params, sub_batch)
+        return jnp.sum(pel * weights)
+
+    loss_val, grads = jax.value_and_grad(loss)(state["params"])
+    params, opt_state, metrics = opt.apply(
+        state["params"], grads, state["opt"], state["step"])
+    new_state = dict(state, params=params, opt=opt_state,
+                     step=state["step"] + 1,
+                     graft=graft_state._replace(step=state["step"] + 1))
+    return new_state, dict(metrics, loss=loss_val)
+
+
+def selection_step(mcfg, tcfg: TrainConfig, state, batch):
+    """Selection only (features + grad embeddings + MaxVol + rank sweep) —
+    isolates the refresh cost for the amortization analysis (§Perf)."""
+    V, G, g_bar = selection_inputs(mcfg, tcfg, state["params"], batch)
+    graft_state = graft_lib.graft_select(tcfg.graft, V, G, g_bar, state["step"])
+    new_state = dict(state, graft=graft_state)
+    return new_state, {"rank": graft_state.rank,
+                       "proj_error": graft_state.last_error}
+
+
+def make_train_step(mcfg, tcfg: TrainConfig, kind: Optional[str] = None):
+    step = {None: graft_train_step if tcfg.use_graft else baseline_train_step,
+            "graft": graft_train_step, "baseline": baseline_train_step,
+            "subset": subset_train_step, "select": selection_step}[kind]
+
+    def fn(state, batch):
+        return step(mcfg, tcfg, state, batch)
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# serve steps
+# ---------------------------------------------------------------------------
+
+def prefill_step(mcfg, params, batch, max_seq: int):
+    return decode_lib.prefill(mcfg, params, batch, max_seq)
+
+
+def decode_step(mcfg, params, cache, tokens):
+    return decode_lib.decode_step(mcfg, params, cache, tokens)

@@ -1,0 +1,12 @@
+"""Model zoo: unified decoder covering dense / MoE / RWKV6 / SSM-hybrid /
+audio / VLM families (the 10 assigned architectures)."""
+from repro.models.model import (ModelConfig, forward_hiddens, init_params,
+                                logits_from_hiddens, loss_fn, params_logical,
+                                per_example_loss, pooled_features)
+from repro.models.decode import decode_step, init_cache, prefill
+
+__all__ = [
+    "ModelConfig", "init_params", "params_logical", "loss_fn",
+    "per_example_loss", "pooled_features", "forward_hiddens",
+    "logits_from_hiddens", "decode_step", "init_cache", "prefill",
+]

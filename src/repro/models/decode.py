@@ -1,0 +1,118 @@
+"""KV-cache / recurrent-state serving path: init_cache, prefill, decode_step.
+
+Cache layout mirrors the scan-stacked block params: every per-layer state
+leaf is stacked on a leading (L,) axis so one ``lax.scan`` drives all layers
+(xs = (layer params, layer cache), ys = new layer cache). Recurrent families
+(rwkv, hymba's SSM heads) carry O(1) state — this is what makes the
+``long_500k`` cell feasible for them and is why it is skipped for pure
+full-attention archs (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models.model import (ModelConfig, _apply_block, embed_inputs,
+                                logits_from_hiddens)
+
+
+def _layer_cache(cfg: ModelConfig, B: int, max_seq: int,
+                 dense_override: bool = False) -> Dict[str, Any]:
+    dt = cfg.dtype
+    fam = "dense" if dense_override else cfg.family
+    D = cfg.d_model
+    H, Hkv, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    c: Dict[str, Any] = {}
+    if fam in ("dense", "audio", "vlm", "moe", "hybrid"):
+        c["attn"] = {"k": jnp.zeros((B, max_seq, Hkv, Dh), dt),
+                     "v": jnp.zeros((B, max_seq, Hkv, Dh), dt)}
+    if fam == "hybrid":
+        c["ssm"] = jnp.zeros((B, H, D // H, cfg.ssm_state), jnp.float32)
+    if fam == "ssm":
+        c["time"] = {"shift": jnp.zeros((B, 1, D), dt),
+                     "wkv": jnp.zeros((B, H, D // H, D // H), jnp.float32)}
+        c["channel"] = {"shift": jnp.zeros((B, 1, D), dt)}
+    return c
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_seq: int) -> Dict[str, Any]:
+    n_scan = cfg.num_layers - cfg.first_k_dense
+    one = _layer_cache(cfg, batch_size, max_seq)
+    cache = {
+        "layers": jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (n_scan,) + x.shape), one),
+        "index": jnp.int32(0),
+    }
+    if cfg.first_k_dense:
+        cache["first"] = [_layer_cache(cfg, batch_size, max_seq, dense_override=True)
+                          for _ in range(cfg.first_k_dense)]
+    return cache
+
+
+def _run_with_cache(cfg: ModelConfig, params, cache, x: jax.Array
+                    ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Push S new token embeddings through the stack, updating the cache."""
+    B, Snew, _ = x.shape
+    idx = cache["index"]
+    positions = idx + jnp.broadcast_to(jnp.arange(Snew, dtype=jnp.int32), (B, Snew))
+    is_local_arr = jnp.asarray(cfg.is_local_pattern(), dtype=jnp.bool_)
+
+    new_cache: Dict[str, Any] = {"index": idx + Snew}
+    if cfg.first_k_dense:
+        firsts = []
+        for i in range(cfg.first_k_dense):
+            x, nc = _apply_block(cfg, params["first_blocks"][i], x, positions,
+                                 is_local=False, cache=cache["first"][i],
+                                 cache_index=idx, dense_override=True)
+            firsts.append(nc)
+        new_cache["first"] = firsts
+
+    def step(xc, scanned):
+        p, c, il = scanned
+        xc, nc = _apply_block(cfg, p, xc, positions, is_local=il,
+                              cache=c, cache_index=idx)
+        return xc, nc
+
+    scanned_args = (params["blocks"], cache["layers"],
+                    is_local_arr[cfg.first_k_dense:])
+    if cfg.scan_layers:
+        x, layer_caches = jax.lax.scan(step, x, scanned_args)
+    else:
+        # unrolled path (roofline cost compiles: scan bodies are counted
+        # once by XLA cost analysis — see launch/dryrun.py)
+        outs = []
+        n_scan = cfg.num_layers - cfg.first_k_dense
+        for i in range(n_scan):
+            layer_in = jax.tree_util.tree_map(lambda a: a[i], scanned_args[:2])
+            x, nc = step(x, (layer_in[0], layer_in[1], scanned_args[2][i]))
+            outs.append(nc)
+        layer_caches = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *outs)
+    new_cache["layers"] = layer_caches
+    x = L.rms_norm(x, params["final_norm"], cfg.rms_eps)
+    return x, new_cache
+
+
+def prefill(cfg: ModelConfig, params, batch, max_seq: int
+            ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Fill a fresh cache from a full prompt batch → (last-position logits, cache)."""
+    x, _, _ = embed_inputs(cfg, params, batch)
+    B = x.shape[0]
+    cache = init_cache(cfg, B, max_seq)
+    h, cache = _run_with_cache(cfg, params, cache, x)
+    logits = logits_from_hiddens(cfg, params, h[:, -1:, :])
+    return logits, cache
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens: jax.Array
+                ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """One autoregressive step. tokens: (B, 1) int32 → (logits (B,1,V), cache)."""
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+    x = constrain(x, ("act_batch", "act_res_seq", "act_embed"))
+    h, cache = _run_with_cache(cfg, params, cache, x)
+    logits = logits_from_hiddens(cfg, params, h)
+    return logits, cache

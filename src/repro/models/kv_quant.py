@@ -1,0 +1,71 @@
+"""Int8 KV-cache quantization (the §Roofline decode-cell memory lever).
+
+The cache at rest stores int8 payloads + per-(token, head) f32 absmax
+scales (1/(2·Dh) overhead ⇒ ~2× HBM cut for bf16 caches, 4× for f32).
+Dequantization happens per KV chunk inside the chunked-attention loop, so
+the bf16 working set stays O(chunk), never the whole cache.
+
+Accuracy: per-token-per-head absmax keeps the quantization step within
+~0.8 % of the per-head dynamic range; the attention-output error is
+sub-bf16-ulp for typical activations (tested in test_kv_quant.py).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_kv(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, H, Dh) → (q int8 same shape, scale f32 (B, S, H))."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf), axis=-1) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(xf / scale[..., None]), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_kv(q: jax.Array, scale: jax.Array, dtype) -> jax.Array:
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def init_quant_cache(batch: int, max_seq: int, kv_heads: int, head_dim: int
+                     ) -> Dict[str, jax.Array]:
+    return {
+        "k_q": jnp.zeros((batch, max_seq, kv_heads, head_dim), jnp.int8),
+        "v_q": jnp.zeros((batch, max_seq, kv_heads, head_dim), jnp.int8),
+        "k_s": jnp.zeros((batch, max_seq, kv_heads), jnp.float32),
+        "v_s": jnp.zeros((batch, max_seq, kv_heads), jnp.float32),
+    }
+
+
+def update_quant_cache(cache: Dict[str, jax.Array], k_new: jax.Array,
+                       v_new: jax.Array, index) -> Dict[str, jax.Array]:
+    """Append S new KV positions at ``index`` (quantize-on-write)."""
+    kq, ks = quantize_kv(k_new)
+    vq, vs = quantize_kv(v_new)
+    upd = jax.lax.dynamic_update_slice_in_dim
+    return {
+        "k_q": upd(cache["k_q"], kq, index, axis=1),
+        "v_q": upd(cache["v_q"], vq, index, axis=1),
+        "k_s": upd(cache["k_s"], ks, index, axis=1),
+        "v_s": upd(cache["v_s"], vs, index, axis=1),
+    }
+
+
+def read_quant_cache(cache: Dict[str, jax.Array], dtype
+                     ) -> Tuple[jax.Array, jax.Array]:
+    """Dequantize the whole cache (small contexts / reference path).
+    Production chunked attention dequantizes per KV tile instead."""
+    k = dequantize_kv(cache["k_q"], cache["k_s"], dtype)
+    v = dequantize_kv(cache["v_q"], cache["v_s"], dtype)
+    return k, v
+
+
+def cache_bytes(batch: int, max_seq: int, kv_heads: int, head_dim: int,
+                quantized: bool) -> int:
+    """At-rest HBM bytes (per layer) — the roofline accounting helper."""
+    n = batch * max_seq * kv_heads
+    if quantized:
+        return 2 * n * head_dim * 1 + 2 * n * 4        # int8 + f32 scales
+    return 2 * n * head_dim * 2                        # bf16

@@ -1,0 +1,429 @@
+"""Unified decoder model covering all 10 assigned architecture families.
+
+One ``ModelConfig`` + one parameter pytree + family-dispatched blocks:
+  dense   — attn + gated MLP                     (stablelm/gemma2/qwen/minicpm)
+  moe     — attn + capacity-factor MoE           (qwen3-moe, kimi-k2)
+  ssm     — RWKV6 time mix + channel mix         (rwkv6)
+  hybrid  — parallel attn∥SSM heads + MLP        (hymba)
+  audio   — dense blocks over frame embeddings   (musicgen; frontend stub)
+  vlm     — dense blocks over patch+text tokens  (internvl2; frontend stub)
+
+Layers are scan-stacked (compile time O(1) in depth); per-layer binary
+patterns (gemma2 local/global, hymba global islands) ride along as scan xs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import constrain
+from repro.models import layers as L
+from repro.models import ssm as S
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    family: str = "dense"           # dense | moe | ssm | hybrid | audio | vlm
+    num_layers: int = 2
+    d_model: int = 128
+    num_heads: int = 4
+    num_kv_heads: int = 4
+    head_dim: int = 32
+    d_ff: int = 512
+    vocab_size: int = 1024
+    # attention
+    qkv_bias: bool = False
+    rope_theta: float = 1e4
+    sliding_window: Optional[int] = None
+    layer_pattern: Tuple[str, ...] = ("global",)   # cycled; "local"|"global"
+    global_layer_indices: Tuple[int, ...] = ()     # explicit global islands (hymba)
+    attn_logit_softcap: Optional[float] = None
+    final_logit_softcap: Optional[float] = None
+    query_scale: Optional[float] = None
+    post_block_norm: bool = False                  # gemma2 post-norms
+    mlp_activation: str = "silu"
+    # moe
+    num_experts: int = 0
+    num_experts_per_tok: int = 0
+    moe_capacity_factor: float = 1.25
+    moe_group_size: int = 512
+    moe_local_groups: bool = False       # chunk-major SP-aligned routing (§Perf i6)
+    first_k_dense: int = 0
+    d_ff_dense: int = 0                            # dense-FFN width for first_k layers
+    # ssm / hybrid
+    ssm_state: int = 0
+    # frontend stubs
+    frontend: Optional[str] = None                 # audio_frames | vision_patches
+    num_patches: int = 0
+    # misc
+    rms_eps: float = 1e-5
+    tie_embeddings: bool = False
+    param_dtype: str = "bfloat16"
+    # perf knobs (hillclimb levers)
+    remat: str = "full"                            # none | full | dots
+    scan_layers: bool = True
+    attn_chunk: int = 0                            # 0 = dense scores; else
+                                                   # flash-style KV chunking
+    loss_chunk: int = 0                            # 0 = whole-seq CE; else
+                                                   # seq-chunked CE (remat'd)
+
+    @property
+    def dtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    def is_local_pattern(self) -> np.ndarray:
+        """(L,) bool: which layers use the sliding window."""
+        idx = np.arange(self.num_layers)
+        if self.global_layer_indices:
+            return ~np.isin(idx, np.asarray(self.global_layer_indices))
+        pat = np.array([p == "local" for p in self.layer_pattern])
+        return pat[idx % len(pat)]
+
+
+# ---------------------------------------------------------------------------
+# parameter init (+ matching logical-axis tree)
+# ---------------------------------------------------------------------------
+
+def _block_init(cfg: ModelConfig, key, dense_override: bool = False):
+    dt = cfg.dtype
+    D = cfg.d_model
+    ks = jax.random.split(key, 8)
+    norm = lambda: jnp.zeros((D,), jnp.float32)
+    fam = "dense" if dense_override else cfg.family
+    if fam in ("dense", "audio", "vlm"):
+        p = {"ln1": norm(), "attn": L.init_attention_params(ks[0], cfg, dt),
+             "ln2": norm(), "mlp": L.init_mlp_params(ks[1], cfg, dt)}
+        if cfg.post_block_norm:
+            p["ln1_post"], p["ln2_post"] = norm(), norm()
+    elif fam == "moe":
+        p = {"ln1": norm(), "attn": L.init_attention_params(ks[0], cfg, dt),
+             "ln2": norm(), "moe": L.init_moe_params(ks[1], cfg, dt)}
+    elif fam == "ssm":
+        p = {"ln1": norm(), "time": S.init_rwkv_time_params(ks[0], cfg, dt),
+             "ln2": norm(), "channel": S.init_rwkv_channel_params(ks[1], cfg, dt)}
+    elif fam == "hybrid":
+        p = {"ln1": norm(), "attn": L.init_attention_params(ks[0], cfg, dt),
+             "ssm": S.init_ssm_params(ks[1], cfg, dt),
+             "ln2": norm(), "mlp": L.init_mlp_params(ks[2], cfg, dt)}
+    else:
+        raise ValueError(cfg.family)
+    if fam == "dense" and dense_override and cfg.d_ff_dense:
+        p["mlp"] = L.init_mlp_params(ks[1], cfg, dt, d_ff=cfg.d_ff_dense)
+    return p
+
+
+_LOGICAL = {
+    # attention
+    "wq": ("embed", "heads", None), "wk": ("embed", "kv_heads", None),
+    "wv": ("embed", "kv_heads", None), "wo": ("heads", None, "embed"),
+    "bq": ("heads", None), "bk": ("kv_heads", None), "bv": ("kv_heads", None),
+    # mlp
+    "w_gate": ("embed", "mlp"), "w_up": ("embed", "mlp"), "w_down": ("mlp", "embed"),
+    # moe (leaf names inside "moe" subtree get experts-first shapes)
+    "router": ("embed", None),
+    # rwkv
+    "wr": ("embed", "ssm_inner"), "wg": ("embed", "ssm_inner"),
+    "lora_A": ("embed", None), "decay_A": ("embed", None),
+    "lora_B_r": (None, "embed"), "lora_B_k": (None, "embed"),
+    "lora_B_v": (None, "embed"), "lora_B_w": (None, "embed"),
+    "lora_B_g": (None, "embed"), "decay_B": (None, "embed"),
+    # ssm heads
+    "w_in": ("embed", "ssm_inner"), "w_out": ("ssm_inner", "embed"),
+    "w_B": ("embed", "heads", None), "w_C": ("embed", "heads", None),
+    "w_delta": ("embed", "heads"),
+    # rwkv channel
+    "w_key": ("embed", "mlp"), "w_value": ("mlp", "embed"),
+    "w_recept": ("embed", "ssm_inner"),
+}
+
+_MOE_LOGICAL = {
+    "w_gate": ("experts", "embed", "mlp"), "w_up": ("experts", "embed", "mlp"),
+    "w_down": ("experts", "mlp", "embed"), "router": ("embed", None),
+}
+
+
+def _leaf_logical(path: Tuple[str, ...], leaf) -> Tuple[Optional[str], ...]:
+    name = path[-1]
+    # rwkv time-mix reuses attention-style names for D×D projections — must
+    # dispatch on the subtree BEFORE the generic table
+    if "time" in path:
+        if name in ("wk", "wv"):
+            return ("embed", "ssm_inner")
+        if name == "wo":
+            return ("ssm_inner", "embed")
+    table = _MOE_LOGICAL if "moe" in path else _LOGICAL
+    if name in table:
+        return table[name]
+    return tuple(None for _ in leaf.shape)
+
+
+def _tree_logical(tree, prefix=()):
+    if isinstance(tree, dict):
+        return {k: _tree_logical(v, prefix + (k,)) for k, v in tree.items()}
+    return _leaf_logical(prefix, tree)
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Dict[str, Any]:
+    dt = cfg.dtype
+    k_embed, k_blocks, k_head, k_first = jax.random.split(key, 4)
+    V, D = cfg.vocab_size, cfg.d_model
+    params: Dict[str, Any] = {
+        "embed": (jax.random.normal(k_embed, (V, D)) * 0.02).astype(dt),
+        "final_norm": jnp.zeros((D,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (jax.random.normal(k_head, (D, V)) * D ** -0.5).astype(dt)
+
+    n_scan = cfg.num_layers - cfg.first_k_dense
+    if cfg.first_k_dense:
+        params["first_blocks"] = [
+            _block_init(cfg, k, dense_override=True)
+            for k in jax.random.split(k_first, cfg.first_k_dense)]
+    # stacked block params for scan
+    block_keys = jax.random.split(k_blocks, n_scan)
+    blocks = [_block_init(cfg, k) for k in block_keys]
+    params["blocks"] = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *blocks)
+    return params
+
+
+def params_logical(cfg: ModelConfig, params) -> Dict[str, Any]:
+    """Logical-axis tree matching ``params`` (stacked dims get 'layers')."""
+    out: Dict[str, Any] = {
+        # vocab dim replicated: a gather from a vocab-sharded table forces the
+        # SPMD partitioner into replicate-then-repartition (observed in the
+        # dry-run HLO); d_model shards over the fsdp axis instead.
+        "embed": (None, "embed"),
+        "final_norm": (None,),
+    }
+    if "lm_head" in params:
+        out["lm_head"] = ("embed", "vocab")
+    if "first_blocks" in params:
+        out["first_blocks"] = [_tree_logical(b) for b in params["first_blocks"]]
+    blocks_logical = _tree_logical(
+        jax.tree_util.tree_map(lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype),
+                               params["blocks"]))
+    out["blocks"] = jax.tree_util.tree_map(
+        lambda lg: ("layers",) + lg, blocks_logical,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def _apply_block(cfg: ModelConfig, p, x, positions, is_local,
+                 cache=None, cache_index=None, dense_override=False):
+    """One residual block; returns (x, new_cache)."""
+    fam = "dense" if dense_override else cfg.family
+    new_cache = {}
+    if fam in ("dense", "audio", "vlm", "moe", "hybrid"):
+        h = L.rms_norm(x, p["ln1"], cfg.rms_eps)
+        attn_out, attn_cache = L.attention(
+            cfg, p["attn"], h, positions, is_local=is_local,
+            cache=cache.get("attn") if cache else None, cache_index=cache_index)
+        if fam == "hybrid":
+            ssm_out, ssm_state = S.ssm_heads(
+                cfg, p["ssm"], h, state=cache.get("ssm") if cache else None)
+            attn_out = attn_out + ssm_out
+            if cache is not None:
+                new_cache["ssm"] = ssm_state
+        if cfg.post_block_norm:
+            attn_out = L.rms_norm(attn_out, p["ln1_post"], cfg.rms_eps)
+        x = x + attn_out
+        h2 = L.rms_norm(x, p["ln2"], cfg.rms_eps)
+        if fam == "moe":
+            # single-token decode is dropless (batching-invariant serving);
+            # prefill/training use capacity-factor semantics.
+            ff = L.moe(cfg, p["moe"], h2,
+                       dropless=cache is not None and x.shape[1] == 1)
+        else:
+            ff = L.mlp(cfg, p["mlp"], h2)
+        if cfg.post_block_norm:
+            ff = L.rms_norm(ff, p["ln2_post"], cfg.rms_eps)
+        x = x + ff
+        if cache is not None:
+            new_cache["attn"] = attn_cache
+    elif fam == "ssm":
+        h = L.rms_norm(x, p["ln1"], cfg.rms_eps)
+        t_out, t_state = S.rwkv_time_mix(
+            cfg, p["time"], h, state=cache.get("time") if cache else None)
+        x = x + t_out
+        h2 = L.rms_norm(x, p["ln2"], cfg.rms_eps)
+        c_out, c_state = S.rwkv_channel_mix(
+            cfg, p["channel"], h2, state=cache.get("channel") if cache else None)
+        x = x + c_out
+        if cache is not None:
+            new_cache["time"], new_cache["channel"] = t_state, c_state
+    else:
+        raise ValueError(fam)
+    return x, (new_cache if cache is not None else None)
+
+
+def _remat_wrap(cfg: ModelConfig, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+# ---------------------------------------------------------------------------
+# forward / loss / features
+# ---------------------------------------------------------------------------
+
+def embed_inputs(cfg: ModelConfig, params, batch) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (x (B,S,D), positions (B,S), loss_mask (B,S))."""
+    dt = cfg.dtype
+    if cfg.family == "audio" or cfg.frontend == "audio_frames":
+        x = batch["frame_embeds"].astype(dt)
+        B, Sq = x.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(Sq, dtype=jnp.int32), (B, Sq))
+        mask = jnp.ones((B, Sq), jnp.float32)
+    elif cfg.family == "vlm" or cfg.frontend == "vision_patches":
+        patches = batch["patch_embeds"].astype(dt)          # (B,P,D)
+        tok = jnp.take(params["embed"], batch["tokens"], axis=0)
+        x = jnp.concatenate([patches, tok], axis=1)
+        B, Sq = x.shape[:2]
+        P = patches.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(Sq, dtype=jnp.int32), (B, Sq))
+        mask = jnp.concatenate([jnp.zeros((B, P), jnp.float32),
+                                jnp.ones_like(batch["tokens"], jnp.float32)], axis=1)
+    else:
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+        B, Sq = x.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(Sq, dtype=jnp.int32), (B, Sq))
+        mask = jnp.ones((B, Sq), jnp.float32)
+    x = constrain(x, ("act_batch", "act_res_seq", "act_embed"))
+    return x, positions, mask
+
+
+def forward_hiddens(cfg: ModelConfig, params, batch) -> Tuple[jax.Array, jax.Array]:
+    """Full forward through the stack → (hiddens (B,S,D), loss_mask (B,S))."""
+    x, positions, mask = embed_inputs(cfg, params, batch)
+    is_local_arr = jnp.asarray(cfg.is_local_pattern(), dtype=jnp.bool_)
+
+    for i in range(cfg.first_k_dense):
+        x, _ = _apply_block(cfg, params["first_blocks"][i], x, positions,
+                            is_local=False, dense_override=True)
+
+    def block_fn(x, scanned):
+        p, is_local = scanned
+        x, _ = _apply_block(cfg, p, x, positions, is_local=is_local)
+        return x, None
+
+    block_fn = _remat_wrap(cfg, block_fn)
+    n_scan = cfg.num_layers - cfg.first_k_dense
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(block_fn, x,
+                            (params["blocks"], is_local_arr[cfg.first_k_dense:]))
+    else:
+        for i in range(n_scan):
+            p_i = jax.tree_util.tree_map(lambda a: a[i], params["blocks"])
+            x, _ = block_fn(x, (p_i, is_local_arr[cfg.first_k_dense + i]))
+    x = L.rms_norm(x, params["final_norm"], cfg.rms_eps)
+    return x, mask
+
+
+def logits_from_hiddens(cfg: ModelConfig, params, h: jax.Array) -> jax.Array:
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    # Megatron parallel-CE layout: logits sharded over VOCAB (model axis),
+    # seq gathered. The alternative (seq-sharded, vocab-full) makes the
+    # lm_head weight grad a full-size f32 [D,V] partial per device — the
+    # buffer dump showed 6×4.4 GiB of exactly that (EXPERIMENTS.md §Perf i2).
+    logits = jnp.einsum("bsd,dv->bsv", h, head)
+    logits = L.softcap(logits, cfg.final_logit_softcap)
+    return constrain(logits, ("act_batch", None, "act_vocab"))
+
+
+def _pad_labels(labels: jax.Array, S: int) -> jax.Array:
+    if labels.shape[1] != S:                    # vlm: labels only on text positions
+        pad = S - labels.shape[1]
+        labels = jnp.concatenate(
+            [jnp.zeros((labels.shape[0], pad), labels.dtype), labels], axis=1)
+    return labels
+
+
+def _ce_sums(cfg: ModelConfig, params, h, labels, mask) -> Tuple[jax.Array, jax.Array]:
+    """Σ nll over valid positions + Σ mask — optionally seq-chunked so the
+    (B,S,V) fp32 softmax intermediates never materialize whole."""
+    if cfg.loss_chunk and h.shape[1] > cfg.loss_chunk:
+        C = cfg.loss_chunk
+        S = h.shape[1]
+        n = S // C
+        assert S % C == 0, (S, C)
+        hc = h.reshape(h.shape[0], n, C, h.shape[-1]).transpose(1, 0, 2, 3)
+        lc = labels.reshape(labels.shape[0], n, C).transpose(1, 0, 2)
+        mc = mask.reshape(mask.shape[0], n, C).transpose(1, 0, 2)
+
+        def body(carry, xs):
+            nll_sum, m_sum = carry
+            h_i, l_i, m_i = xs
+            logits = logits_from_hiddens(cfg, params, h_i)
+            logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+            nll = -jnp.take_along_axis(logp, l_i[..., None], axis=-1)[..., 0]
+            return (nll_sum + jnp.sum(nll * m_i), m_sum + jnp.sum(m_i)), None
+
+        (nll_sum, m_sum), _ = jax.lax.scan(
+            jax.checkpoint(body), (jnp.float32(0.0), jnp.float32(0.0)),
+            (hc, lc, mc))
+        return nll_sum, m_sum
+    logits = logits_from_hiddens(cfg, params, h)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return jnp.sum(nll * mask), jnp.sum(mask)
+
+
+def loss_fn(cfg: ModelConfig, params, batch) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Mean next-token CE over valid positions. batch["labels"]: (B, S_text)."""
+    h, mask = forward_hiddens(cfg, params, batch)
+    labels = _pad_labels(batch["labels"], h.shape[1])
+    nll_sum, m_sum = _ce_sums(cfg, params, h, labels, mask)
+    loss = nll_sum / jnp.maximum(m_sum, 1.0)
+    return loss, {"nll": loss}
+
+
+def per_example_loss(cfg: ModelConfig, params, batch) -> jax.Array:
+    """(B,) per-sequence loss — GRAFT's per-sample signal."""
+    h, mask = forward_hiddens(cfg, params, batch)
+    labels = _pad_labels(batch["labels"], h.shape[1])
+    if cfg.loss_chunk and h.shape[1] > cfg.loss_chunk:
+        C = cfg.loss_chunk
+        B, S = mask.shape
+        n = S // C
+        hc = h.reshape(B, n, C, h.shape[-1]).transpose(1, 0, 2, 3)
+        lc = labels.reshape(B, n, C).transpose(1, 0, 2)
+        mc = mask.reshape(B, n, C).transpose(1, 0, 2)
+
+        def body(carry, xs):
+            nll_sum, m_sum = carry                     # (B,), (B,)
+            h_i, l_i, m_i = xs
+            logits = logits_from_hiddens(cfg, params, h_i)
+            logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+            nll = -jnp.take_along_axis(logp, l_i[..., None], axis=-1)[..., 0]
+            return (nll_sum + jnp.sum(nll * m_i, axis=1),
+                    m_sum + jnp.sum(m_i, axis=1)), None
+
+        (nll_sum, m_sum), _ = jax.lax.scan(
+            jax.checkpoint(body),
+            (jnp.zeros((B,), jnp.float32), jnp.zeros((B,), jnp.float32)),
+            (hc, lc, mc))
+        return nll_sum / jnp.maximum(m_sum, 1.0)
+    logits = logits_from_hiddens(cfg, params, h)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return jnp.sum(nll * mask, axis=1) / jnp.maximum(jnp.sum(mask, axis=1), 1.0)
+
+
+def pooled_features(cfg: ModelConfig, params, batch) -> jax.Array:
+    """(B, D) mean-pooled final hiddens — GRAFT's feature source at LM scale."""
+    h, mask = forward_hiddens(cfg, params, batch)
+    w = mask[..., None] / jnp.maximum(jnp.sum(mask, axis=1)[:, None, None], 1.0)
+    return jnp.sum(h.astype(jnp.float32) * w, axis=1)

@@ -1,0 +1,230 @@
+"""Recurrent blocks: RWKV6 ("Finch") time/channel mix and a Mamba-style
+selective SSM head (used standalone for rwkv6-7b and inside Hymba's parallel
+attn+SSM layers).
+
+Train/prefill use ``lax.scan`` over time with the state resident (no T-sized
+state materialization); decode is a single O(1) state update. The Pallas
+``rwkv_scan`` kernel (repro/kernels) is the TPU fast path for the WKV
+recurrence; the scan here is the jnp reference used by the SPMD dry-run.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 time mix
+# ---------------------------------------------------------------------------
+
+def _token_shift(x: jax.Array, last: Optional[jax.Array]) -> Tuple[jax.Array, jax.Array]:
+    """Shift sequence right by one. ``last``: (B,1,D) carry for decode."""
+    if last is None:
+        last = jnp.zeros_like(x[:, :1])
+    shifted = jnp.concatenate([last, x[:, :-1]], axis=1)
+    return shifted, x[:, -1:]
+
+
+def _lora_mix(x, shifted, mu, A, B_):
+    """RWKV6 data-dependent lerp: x + (shifted - x) * (mu + tanh(xA)B)."""
+    delta = shifted - x
+    dyn = jnp.einsum("bsd,dr->bsr", x, A)
+    dyn = jnp.einsum("bsr,rd->bsd", jnp.tanh(dyn), B_)
+    return x + delta * (mu + dyn)
+
+
+def rwkv_time_mix(cfg, p, x: jax.Array, state: Optional[dict] = None
+                  ) -> Tuple[jax.Array, Optional[dict]]:
+    """RWKV6 attention-free token mixing.
+
+    x: (B, S, D). state (decode): {"shift": (B,1,D), "wkv": (B,H,Dh,Dh)}.
+    Returns (out, new_state or None).
+    """
+    B, S, D = x.shape
+    H = cfg.num_heads
+    Dh = D // H
+
+    shifted, new_shift = _token_shift(x, state["shift"] if state else None)
+    xr = _lora_mix(x, shifted, p["mu_r"], p["lora_A"], p["lora_B_r"])
+    xk = _lora_mix(x, shifted, p["mu_k"], p["lora_A"], p["lora_B_k"])
+    xv = _lora_mix(x, shifted, p["mu_v"], p["lora_A"], p["lora_B_v"])
+    xw = _lora_mix(x, shifted, p["mu_w"], p["lora_A"], p["lora_B_w"])
+    xg = _lora_mix(x, shifted, p["mu_g"], p["lora_A"], p["lora_B_g"])
+
+    r = jnp.einsum("bsd,de->bse", xr, p["wr"]).reshape(B, S, H, Dh)
+    k = jnp.einsum("bsd,de->bse", xk, p["wk"]).reshape(B, S, H, Dh)
+    v = jnp.einsum("bsd,de->bse", xv, p["wv"]).reshape(B, S, H, Dh)
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", xg, p["wg"]))
+    # data-dependent per-channel decay in (0, 1): w = exp(-exp(w0 + f(x)))
+    wlog = p["w0"] + jnp.einsum("bsd,dr->bsr", jnp.tanh(
+        jnp.einsum("bsd,dr->bsr", xw, p["decay_A"])), p["decay_B"])
+    w = jnp.exp(-jnp.exp(wlog.astype(jnp.float32))).reshape(B, S, H, Dh)
+    u = p["u"].reshape(H, Dh)
+
+    r = constrain(r, ("act_batch", "act_seq", "act_heads", None))
+    k = constrain(k, ("act_batch", "act_seq", "act_heads", None))
+    v = constrain(v, ("act_batch", "act_seq", "act_heads", None))
+
+    rf, kf, vf, wf = (t.astype(jnp.float32).transpose(0, 2, 1, 3)
+                      for t in (r, k, v, w))  # (B,H,S,Dh)
+
+    S0 = (state["wkv"] if state else
+          jnp.zeros((B, H, Dh, Dh), dtype=jnp.float32))
+
+    def step(carry, inputs):
+        rt, kt, vt, wt = inputs                    # each (B,H,Dh)
+        kv = kt[..., :, None] * vt[..., None, :]   # (B,H,Dh,Dh)
+        out = jnp.einsum("bhk,bhkv->bhv", rt, carry + u[None, :, :, None] * kv)
+        carry = carry * wt[..., :, None] + kv
+        return carry, out
+
+    xs = tuple(t.transpose(2, 0, 1, 3) for t in (rf, kf, vf, wf))  # (S,B,H,Dh)
+    Sn, outs = jax.lax.scan(step, S0, xs)
+    wkv = outs.transpose(1, 0, 2, 3).reshape(B, S, D)              # (B,S,D)
+
+    # per-head group norm then gate
+    wkv = wkv.reshape(B, S, H, Dh)
+    mean = jnp.mean(wkv, axis=-1, keepdims=True)
+    var = jnp.var(wkv, axis=-1, keepdims=True)
+    wkv = (wkv - mean) * jax.lax.rsqrt(var + 1e-5)
+    wkv = (wkv * p["ln_x_scale"].reshape(H, Dh)).reshape(B, S, D).astype(x.dtype)
+    out = jnp.einsum("bsd,de->bse", wkv * g, p["wo"])
+    out = constrain(out, ("act_batch", "act_res_seq", "act_embed"))
+
+    new_state = {"shift": new_shift, "wkv": Sn} if state is not None else None
+    return out, new_state
+
+
+def init_rwkv_time_params(key, cfg, dtype) -> dict:
+    D = cfg.d_model
+    H = cfg.num_heads
+    Dh = D // H
+    lora_r = max(32, D // 64)
+    ks = jax.random.split(key, 12)
+    s = D ** -0.5
+
+    def mat(k, shape, scale):
+        return (jax.random.normal(k, shape) * scale).astype(dtype)
+
+    p = {
+        "wr": mat(ks[0], (D, D), s), "wk": mat(ks[1], (D, D), s),
+        "wv": mat(ks[2], (D, D), s), "wg": mat(ks[3], (D, D), s),
+        "wo": mat(ks[4], (D, D), s),
+        "lora_A": mat(ks[5], (D, lora_r), s),
+        "lora_B_r": jnp.zeros((lora_r, D), dtype),
+        "lora_B_k": jnp.zeros((lora_r, D), dtype),
+        "lora_B_v": jnp.zeros((lora_r, D), dtype),
+        "lora_B_w": jnp.zeros((lora_r, D), dtype),
+        "lora_B_g": jnp.zeros((lora_r, D), dtype),
+        "mu_r": jnp.full((D,), 0.5, dtype), "mu_k": jnp.full((D,), 0.5, dtype),
+        "mu_v": jnp.full((D,), 0.5, dtype), "mu_w": jnp.full((D,), 0.5, dtype),
+        "mu_g": jnp.full((D,), 0.5, dtype),
+        "decay_A": mat(ks[6], (D, lora_r), s),
+        "decay_B": mat(ks[7], (lora_r, D), 0.01),
+        "w0": jnp.full((D,), 0.5, jnp.float32),   # exp(-exp(0.5)) ≈ 0.19 decay
+        "u": (jax.random.normal(ks[8], (D,)) * 0.1).astype(jnp.float32),
+        "ln_x_scale": jnp.ones((D,), jnp.float32),
+    }
+    return p
+
+
+def rwkv_channel_mix(cfg, p, x: jax.Array, state: Optional[dict] = None
+                     ) -> Tuple[jax.Array, Optional[dict]]:
+    """RWKV FFN with token shift and squared-ReLU."""
+    shifted, new_shift = _token_shift(x, state["shift"] if state else None)
+    xk = x + (shifted - x) * p["mu_k"]
+    xr = x + (shifted - x) * p["mu_r"]
+    k = jnp.einsum("bsd,df->bsf", xk, p["w_key"])
+    k = jnp.square(jax.nn.relu(k))
+    k = constrain(k, ("act_batch", "act_seq", "act_mlp"))
+    kv = jnp.einsum("bsf,fd->bsd", k, p["w_value"])
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["w_recept"]))
+    out = constrain(r * kv, ("act_batch", "act_res_seq", "act_embed"))
+    new_state = {"shift": new_shift} if state is not None else None
+    return out, new_state
+
+
+def init_rwkv_channel_params(key, cfg, dtype) -> dict:
+    D, F = cfg.d_model, cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_key": (jax.random.normal(k1, (D, F)) * D ** -0.5).astype(dtype),
+        "w_value": (jax.random.normal(k2, (F, D)) * F ** -0.5).astype(dtype),
+        "w_recept": (jax.random.normal(k3, (D, D)) * D ** -0.5).astype(dtype),
+        "mu_k": jnp.full((D,), 0.5, dtype),
+        "mu_r": jnp.full((D,), 0.5, dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Mamba-style selective SSM head (Hymba)
+# ---------------------------------------------------------------------------
+
+def ssm_heads(cfg, p, x: jax.Array, state: Optional[jax.Array] = None
+              ) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """Selective SSM over H heads of dim Dh with diagonal state size N.
+
+    h_t = exp(-softplus(Δ_t) A) ⊙ h_{t-1} + Δ_t · (x̃_t ⊗ B_t)
+    y_t = (h_t · C_t) + D_skip ⊙ x̃_t
+    x: (B,S,D) → y: (B,S,D). state: (B,H,Dh,N) decode carry.
+    """
+    B, S, D = x.shape
+    H = cfg.num_heads
+    Dh = D // H
+    N = cfg.ssm_state
+
+    xt = jnp.einsum("bsd,de->bse", x, p["w_in"]).reshape(B, S, H, Dh)
+    Bm = jnp.einsum("bsd,dhn->bshn", x, p["w_B"])          # (B,S,H,N)
+    Cm = jnp.einsum("bsd,dhn->bshn", x, p["w_C"])
+    delta = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", x, p["w_delta"]).astype(jnp.float32)
+        + p["delta_bias"])                                  # (B,S,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))            # (H,N) negative
+    decay = jnp.exp(delta[..., None] * A[None, None])       # (B,S,H,N)
+
+    xt = constrain(xt, ("act_batch", "act_seq", "act_heads", None))
+    xtf = xt.astype(jnp.float32)
+
+    def step(h, inputs):
+        dec_t, b_t, x_t, dl_t, c_t = inputs
+        # h: (B,H,Dh,N)
+        h = h * dec_t[:, :, None, :] + (dl_t[..., None, None] *
+                                        x_t[..., :, None] * b_t[:, :, None, :])
+        y = jnp.einsum("bhdn,bhn->bhd", h, c_t)
+        return h, y
+
+    h0 = state if state is not None else jnp.zeros((B, H, Dh, N), jnp.float32)
+    xs = (decay.transpose(1, 0, 2, 3), Bm.astype(jnp.float32).transpose(1, 0, 2, 3),
+          xtf.transpose(1, 0, 2, 3), delta.transpose(1, 0, 2),
+          Cm.astype(jnp.float32).transpose(1, 0, 2, 3))
+    hN, ys = jax.lax.scan(step, h0, xs)
+    y = ys.transpose(1, 0, 2, 3)                            # (B,S,H,Dh)
+    y = y + p["D_skip"].astype(jnp.float32)[None, None, :, None] * xtf
+    y = y.reshape(B, S, D).astype(x.dtype)
+    out = jnp.einsum("bsd,de->bse", y, p["w_out"])
+    out = constrain(out, ("act_batch", "act_res_seq", "act_embed"))
+    new_state = hN if state is not None else None
+    return out, new_state
+
+
+def init_ssm_params(key, cfg, dtype) -> dict:
+    D = cfg.d_model
+    H = cfg.num_heads
+    N = cfg.ssm_state
+    ks = jax.random.split(key, 6)
+    s = D ** -0.5
+    return {
+        "w_in": (jax.random.normal(ks[0], (D, D)) * s).astype(dtype),
+        "w_out": (jax.random.normal(ks[1], (D, D)) * s).astype(dtype),
+        "w_B": (jax.random.normal(ks[2], (D, H, N)) * s).astype(dtype),
+        "w_C": (jax.random.normal(ks[3], (D, H, N)) * s).astype(dtype),
+        "w_delta": (jax.random.normal(ks[4], (D, H)) * s).astype(dtype),
+        "delta_bias": jnp.zeros((H,), jnp.float32),
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, N + 1, dtype=jnp.float32), (H, N))),
+        "D_skip": jnp.ones((H,), jnp.float32),
+    }

@@ -1,0 +1,8 @@
+"""From-scratch optimizers + schedules (AdamW, SGD, Lion, factored Adafactor)."""
+from repro.optim.optimizers import (Optimizer, OptimizerConfig,
+                                    clip_by_global_norm, global_norm,
+                                    make_optimizer)
+from repro.optim.schedules import SCHEDULES
+
+__all__ = ["Optimizer", "OptimizerConfig", "make_optimizer",
+           "clip_by_global_norm", "global_norm", "SCHEDULES"]

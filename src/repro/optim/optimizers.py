@@ -1,0 +1,218 @@
+"""Optimizers built from scratch (no optax in this container): AdamW,
+SGD+momentum, Lion, and Adafactor with factored second moments — the
+factored state is what lets kimi-k2 (1T params) fit the 16 GB/chip HBM
+budget (DESIGN.md §5). All states inherit the parameter sharding, i.e.
+ZeRO-style fully sharded optimizer state under pjit.
+
+API: ``opt = make_optimizer(cfg); state = opt.init(params);
+new_params, new_state, metrics = opt.apply(params, grads, state, step)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"             # adamw | sgd | lion | adafactor
+    learning_rate: float = 1e-3
+    schedule: str = "cosine"        # constant | cosine | wsd | linear
+    total_steps: int = 1000
+    warmup_steps: int = 100
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    momentum: float = 0.9
+    clip_norm: Optional[float] = 1.0
+    state_dtype: str = "float32"    # bfloat16 halves m/v memory at scale
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[PyTree], PyTree]
+    apply: Callable[[PyTree, PyTree, PyTree, jax.Array],
+                    Tuple[PyTree, PyTree, Dict[str, jax.Array]]]
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in jax.tree_util.tree_leaves(tree)))
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> Tuple[PyTree, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
+
+
+def _lr_fn(cfg: OptimizerConfig):
+    from repro.optim.schedules import SCHEDULES
+    sched = SCHEDULES[cfg.schedule]
+    if cfg.schedule == "constant":
+        return sched(cfg.learning_rate)
+    return sched(cfg.learning_rate, cfg.total_steps, cfg.warmup_steps)
+
+
+def make_optimizer(cfg: OptimizerConfig) -> Optimizer:
+    lr_fn = _lr_fn(cfg)
+    sdt = jnp.dtype(cfg.state_dtype)
+
+    def preprocess(grads):
+        metrics = {}
+        if cfg.clip_norm is not None:
+            grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+            metrics["grad_norm"] = gnorm
+        else:
+            metrics["grad_norm"] = global_norm(grads)
+        return grads, metrics
+
+    # ----------------------------- AdamW ---------------------------------
+    if cfg.name == "adamw":
+        def init(params):
+            z = lambda p: jnp.zeros(p.shape, sdt)
+            return {"m": jax.tree_util.tree_map(z, params),
+                    "v": jax.tree_util.tree_map(z, params)}
+
+        def apply(params, grads, state, step):
+            grads, metrics = preprocess(grads)
+            lr = lr_fn(step)
+            t = step.astype(jnp.float32) + 1.0
+            bc1 = 1.0 - cfg.beta1 ** t
+            bc2 = 1.0 - cfg.beta2 ** t
+
+            def upd(p, g, m, v):
+                gf = g.astype(jnp.float32)
+                m_new = cfg.beta1 * m.astype(jnp.float32) + (1 - cfg.beta1) * gf
+                v_new = cfg.beta2 * v.astype(jnp.float32) + (1 - cfg.beta2) * gf * gf
+                update = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + cfg.eps)
+                update = update + cfg.weight_decay * p.astype(jnp.float32)
+                p_new = p.astype(jnp.float32) - lr * update
+                return p_new.astype(p.dtype), m_new.astype(sdt), v_new.astype(sdt)
+
+            flat = jax.tree_util.tree_map(upd, params, grads, state["m"], state["v"])
+            params_new = jax.tree_util.tree_map(lambda x: x[0], flat,
+                                                is_leaf=lambda x: isinstance(x, tuple))
+            m_new = jax.tree_util.tree_map(lambda x: x[1], flat,
+                                           is_leaf=lambda x: isinstance(x, tuple))
+            v_new = jax.tree_util.tree_map(lambda x: x[2], flat,
+                                           is_leaf=lambda x: isinstance(x, tuple))
+            metrics["lr"] = lr
+            return params_new, {"m": m_new, "v": v_new}, metrics
+
+        return Optimizer(init, apply)
+
+    # ------------------------- SGD + momentum -----------------------------
+    if cfg.name == "sgd":
+        def init(params):
+            return {"m": jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, sdt), params)}
+
+        def apply(params, grads, state, step):
+            grads, metrics = preprocess(grads)
+            lr = lr_fn(step)
+
+            def upd(p, g, m):
+                m_new = cfg.momentum * m.astype(jnp.float32) + g.astype(jnp.float32)
+                p_new = p.astype(jnp.float32) - lr * (
+                    m_new + cfg.weight_decay * p.astype(jnp.float32))
+                return p_new.astype(p.dtype), m_new.astype(sdt)
+
+            flat = jax.tree_util.tree_map(upd, params, grads, state["m"])
+            params_new = jax.tree_util.tree_map(lambda x: x[0], flat,
+                                                is_leaf=lambda x: isinstance(x, tuple))
+            m_new = jax.tree_util.tree_map(lambda x: x[1], flat,
+                                           is_leaf=lambda x: isinstance(x, tuple))
+            metrics["lr"] = lr
+            return params_new, {"m": m_new}, metrics
+
+        return Optimizer(init, apply)
+
+    # ------------------------------ Lion ----------------------------------
+    if cfg.name == "lion":
+        def init(params):
+            return {"m": jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, sdt), params)}
+
+        def apply(params, grads, state, step):
+            grads, metrics = preprocess(grads)
+            lr = lr_fn(step)
+
+            def upd(p, g, m):
+                gf, mf = g.astype(jnp.float32), m.astype(jnp.float32)
+                update = jnp.sign(cfg.beta1 * mf + (1 - cfg.beta1) * gf)
+                m_new = cfg.beta2 * mf + (1 - cfg.beta2) * gf
+                p_new = p.astype(jnp.float32) - lr * (
+                    update + cfg.weight_decay * p.astype(jnp.float32))
+                return p_new.astype(p.dtype), m_new.astype(sdt)
+
+            flat = jax.tree_util.tree_map(upd, params, grads, state["m"])
+            params_new = jax.tree_util.tree_map(lambda x: x[0], flat,
+                                                is_leaf=lambda x: isinstance(x, tuple))
+            m_new = jax.tree_util.tree_map(lambda x: x[1], flat,
+                                           is_leaf=lambda x: isinstance(x, tuple))
+            metrics["lr"] = lr
+            return params_new, {"m": m_new}, metrics
+
+        return Optimizer(init, apply)
+
+    # ---------------------------- Adafactor -------------------------------
+    if cfg.name == "adafactor":
+        def init(params):
+            def state_for(p):
+                if p.ndim >= 2:
+                    # factor over the two largest dims (trailing two)
+                    return {"vr": jnp.zeros(p.shape[:-1], sdt),
+                            "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], sdt)}
+                return {"v": jnp.zeros(p.shape, sdt)}
+            return {"v": jax.tree_util.tree_map(
+                state_for, params, is_leaf=lambda x: hasattr(x, "ndim"))}
+
+        def apply(params, grads, state, step):
+            grads, metrics = preprocess(grads)
+            lr = lr_fn(step)
+            t = step.astype(jnp.float32) + 1.0
+            beta2t = 1.0 - t ** -0.8       # Adafactor's increasing decay
+
+            def upd(p, g, s):
+                gf = g.astype(jnp.float32)
+                g2 = gf * gf + 1e-30
+                if p.ndim >= 2:
+                    vr = beta2t * s["vr"].astype(jnp.float32) + \
+                        (1 - beta2t) * jnp.mean(g2, axis=-1)
+                    vc = beta2t * s["vc"].astype(jnp.float32) + \
+                        (1 - beta2t) * jnp.mean(g2, axis=-2)
+                    denom = (vr[..., None] * vc[..., None, :]) / (
+                        jnp.mean(vr, axis=-1, keepdims=True)[..., None] + 1e-30)
+                    update = gf / (jnp.sqrt(denom) + 1e-30)
+                    s_new = {"vr": vr.astype(sdt), "vc": vc.astype(sdt)}
+                else:
+                    v = beta2t * s["v"].astype(jnp.float32) + (1 - beta2t) * g2
+                    update = gf / (jnp.sqrt(v) + 1e-30)
+                    s_new = {"v": v.astype(sdt)}
+                # update clipping (Adafactor d=1.0)
+                rms = jnp.sqrt(jnp.mean(update * update) + 1e-30)
+                update = update / jnp.maximum(1.0, rms)
+                p_new = p.astype(jnp.float32) - lr * (
+                    update + cfg.weight_decay * p.astype(jnp.float32))
+                return p_new.astype(p.dtype), s_new
+
+            flat = jax.tree_util.tree_map(
+                upd, params, grads, state["v"],
+                is_leaf=lambda x: isinstance(x, dict) and ("vr" in x or "v" in x))
+            params_new = jax.tree_util.tree_map(lambda x: x[0], flat,
+                                                is_leaf=lambda x: isinstance(x, tuple))
+            v_new = jax.tree_util.tree_map(lambda x: x[1], flat,
+                                           is_leaf=lambda x: isinstance(x, tuple))
+            metrics["lr"] = lr
+            return params_new, {"v": v_new}, metrics
+
+        return Optimizer(init, apply)
+
+    raise ValueError(f"unknown optimizer '{cfg.name}'")

@@ -1,0 +1,56 @@
+"""Learning-rate schedules: cosine, WSD (MiniCPM's warmup-stable-decay),
+linear, constant. All are jit-safe ``f(step: int32) -> f32``."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    def f(step):
+        return jnp.float32(lr)
+    return f
+
+
+def cosine(lr: float, total_steps: int, warmup_steps: int = 0,
+           min_ratio: float = 0.1):
+    def f(step):
+        step = jnp.float32(step)
+        warm = step / jnp.maximum(warmup_steps, 1)
+        progress = jnp.clip((step - warmup_steps) /
+                            jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * progress))
+        return jnp.float32(lr) * jnp.where(step < warmup_steps, warm, cos)
+    return f
+
+
+def wsd(lr: float, total_steps: int, warmup_steps: int = 0,
+        decay_fraction: float = 0.1, min_ratio: float = 0.01):
+    """Warmup → Stable → Decay (MiniCPM §WSD): constant plateau, then a short
+    exponential-ish (here: linear-in-log) decay over the final fraction."""
+    decay_steps = max(int(total_steps * decay_fraction), 1)
+    decay_start = total_steps - decay_steps
+
+    def f(step):
+        step = jnp.float32(step)
+        warm = step / jnp.maximum(warmup_steps, 1)
+        decay_progress = jnp.clip((step - decay_start) / decay_steps, 0.0, 1.0)
+        decay = jnp.exp(jnp.log(jnp.maximum(min_ratio, 1e-6)) * decay_progress)
+        scale = jnp.where(step < warmup_steps, warm,
+                          jnp.where(step < decay_start, 1.0, decay))
+        return jnp.float32(lr) * scale
+    return f
+
+
+def linear(lr: float, total_steps: int, warmup_steps: int = 0,
+           min_ratio: float = 0.0):
+    def f(step):
+        step = jnp.float32(step)
+        warm = step / jnp.maximum(warmup_steps, 1)
+        progress = jnp.clip((step - warmup_steps) /
+                            jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+        lin = 1.0 - (1.0 - min_ratio) * progress
+        return jnp.float32(lr) * jnp.where(step < warmup_steps, warm, lin)
+    return f
+
+
+SCHEDULES = {"constant": constant, "cosine": cosine, "wsd": wsd, "linear": linear}

@@ -1,0 +1,169 @@
+"""Per-kernel allclose sweeps vs the pure-jnp oracles (interpret mode runs
+the exact TPU kernel body on CPU)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.fast_maxvol import fast_maxvol_pallas
+from repro.kernels.projection_sweep import projection_sweep_pallas
+from repro.kernels.rwkv_scan import rwkv_scan_pallas
+
+
+class TestFastMaxvolKernel:
+    @pytest.mark.parametrize("K,R,rank", [
+        (16, 4, 4), (64, 16, 16), (128, 32, 8), (256, 64, 64),
+        (100, 12, 12), (33, 7, 5),
+    ])
+    def test_matches_ref(self, rng, K, R, rank):
+        V = jnp.asarray(rng.normal(size=(K, R)).astype(np.float32))
+        piv_k, lv_k = fast_maxvol_pallas(V, rank, interpret=True)
+        piv_r, lv_r = ref.fast_maxvol_ref(V, rank)
+        assert np.array_equal(np.asarray(piv_k), np.asarray(piv_r))
+        np.testing.assert_allclose(float(lv_k), float(lv_r), rtol=1e-5)
+
+    @pytest.mark.parametrize("dtype", [np.float32, np.float64, np.float16])
+    def test_dtype_sweep(self, rng, dtype):
+        V = jnp.asarray(rng.normal(size=(64, 8)).astype(dtype))
+        piv_k, _ = fast_maxvol_pallas(V, 8, interpret=True)
+        piv_r, _ = ref.fast_maxvol_ref(V.astype(jnp.float32), 8)
+        assert np.array_equal(np.asarray(piv_k), np.asarray(piv_r))
+
+    def test_vmem_budget_guard(self, rng):
+        V = jnp.zeros((4096, 1024), jnp.float32)      # 16 MB > budget
+        with pytest.raises(ValueError, match="VMEM"):
+            fast_maxvol_pallas(V, 16, interpret=True)
+
+
+class TestProjectionSweepKernel:
+    @pytest.mark.parametrize("d,R", [(32, 4), (50, 16), (512, 32),
+                                     (2048, 64), (999, 13)])
+    def test_matches_ref(self, rng, d, R):
+        G = jnp.asarray(rng.normal(size=(d, R)).astype(np.float32))
+        g = jnp.asarray(rng.normal(size=(d,)).astype(np.float32))
+        e_k = projection_sweep_pallas(G, g, interpret=True)
+        e_r = ref.projection_sweep_ref(G, g)
+        np.testing.assert_allclose(np.asarray(e_k), np.asarray(e_r), atol=1e-5)
+
+    def test_monotone(self, rng):
+        G = jnp.asarray(rng.normal(size=(128, 24)).astype(np.float32))
+        g = jnp.asarray(rng.normal(size=(128,)).astype(np.float32))
+        errs = np.asarray(projection_sweep_pallas(G, g, interpret=True))
+        assert np.all(np.diff(errs) <= 1e-5)
+
+
+class TestRwkvScanKernel:
+    @pytest.mark.parametrize("BH,T,D,chunk", [
+        (1, 32, 16, 8), (4, 64, 32, 16), (2, 128, 64, 32), (3, 96, 48, 32),
+    ])
+    def test_matches_ref(self, rng, BH, T, D, chunk):
+        r = rng.normal(size=(BH, T, D)).astype(np.float32) * 0.3
+        k = rng.normal(size=(BH, T, D)).astype(np.float32) * 0.3
+        v = rng.normal(size=(BH, T, D)).astype(np.float32) * 0.3
+        w = (0.4 + 0.59 * rng.random(size=(BH, T, D))).astype(np.float32)
+        u = rng.normal(size=(BH, D)).astype(np.float32) * 0.1
+        o_k = rwkv_scan_pallas(*map(jnp.asarray, (r, k, v, w, u)),
+                               chunk=chunk, interpret=True)
+        o_r = np.stack([np.asarray(ref.rwkv_chunk_ref(
+            jnp.asarray(r[i]), jnp.asarray(k[i]), jnp.asarray(v[i]),
+            jnp.asarray(w[i]), jnp.asarray(u[i]))) for i in range(BH)])
+        np.testing.assert_allclose(np.asarray(o_k), o_r, atol=2e-4)
+
+    def test_chunk_invariance(self, rng):
+        """Output must not depend on the chunk size (state carried exactly)."""
+        BH, T, D = 2, 64, 32
+        args = (rng.normal(size=(BH, T, D)).astype(np.float32) * 0.3,
+                rng.normal(size=(BH, T, D)).astype(np.float32) * 0.3,
+                rng.normal(size=(BH, T, D)).astype(np.float32) * 0.3,
+                (0.5 + 0.49 * rng.random((BH, T, D))).astype(np.float32),
+                rng.normal(size=(BH, D)).astype(np.float32) * 0.1)
+        outs = [np.asarray(rwkv_scan_pallas(*map(jnp.asarray, args),
+                                            chunk=c, interpret=True))
+                for c in (8, 16, 64)]
+        np.testing.assert_allclose(outs[0], outs[1], atol=1e-5)
+        np.testing.assert_allclose(outs[0], outs[2], atol=1e-5)
+
+    def test_indivisible_chunk_raises(self, rng):
+        with pytest.raises(ValueError, match="divisible"):
+            rwkv_scan_pallas(jnp.zeros((1, 30, 8)), jnp.zeros((1, 30, 8)),
+                             jnp.zeros((1, 30, 8)), jnp.ones((1, 30, 8)),
+                             jnp.zeros((1, 8)), chunk=16, interpret=True)
+
+
+class TestOpsDispatch:
+    def test_ops_cpu_uses_interpret(self, rng):
+        V = jnp.asarray(rng.normal(size=(32, 8)).astype(np.float32))
+        piv = ops.fast_maxvol(V, 8)
+        piv_r, _ = ref.fast_maxvol_ref(V, 8)
+        assert np.array_equal(np.asarray(piv), np.asarray(piv_r))
+
+    def test_graft_select_with_pallas_kernels(self, rng):
+        """GraftConfig(use_pallas=True) must agree with the jnp path."""
+        from repro.core import graft
+        from repro.core.features import svd_features
+        K, d = 32, 24
+        A = jnp.asarray(rng.normal(size=(K, d)).astype(np.float32))
+        G = jnp.asarray(rng.normal(size=(d, K)).astype(np.float32))
+        gb = jnp.asarray(np.asarray(G).mean(1))
+        V = svd_features(A, 8)
+        cfg_j = graft.GraftConfig(rset=(2, 4, 8), eps=0.3, use_pallas=False)
+        cfg_p = graft.GraftConfig(rset=(2, 4, 8), eps=0.3, use_pallas=True)
+        s_j = graft.graft_select(cfg_j, V, G, gb, jnp.int32(0))
+        s_p = graft.graft_select(cfg_p, V, G, gb, jnp.int32(0))
+        assert np.array_equal(np.asarray(s_j.pivots), np.asarray(s_p.pivots))
+        assert int(s_j.rank) == int(s_p.rank)
+        np.testing.assert_allclose(float(s_j.last_error),
+                                   float(s_p.last_error), atol=1e-5)
+
+
+class TestFlashAttentionKernel:
+    @pytest.mark.parametrize("BH,S,Dh,bq,bk,causal,window,softcap", [
+        (2, 256, 64, 128, 128, True, None, None),
+        (1, 256, 128, 64, 64, True, None, 50.0),      # gemma2-style softcap
+        (3, 128, 32, 64, 32, True, 48, None),          # sliding window
+        (2, 256, 64, 128, 64, False, None, None),      # bidirectional
+        (1, 128, 64, 128, 128, True, None, None),      # single tile
+    ])
+    def test_matches_dense_oracle(self, rng, BH, S, Dh, bq, bk, causal,
+                                  window, softcap):
+        from repro.kernels.flash_attention import flash_attention_pallas
+        q = jnp.asarray(rng.normal(size=(BH, S, Dh)).astype(np.float32))
+        k = jnp.asarray(rng.normal(size=(BH, S, Dh)).astype(np.float32))
+        v = jnp.asarray(rng.normal(size=(BH, S, Dh)).astype(np.float32))
+        o_k = flash_attention_pallas(q, k, v, block_q=bq, block_k=bk,
+                                     causal=causal, window=window,
+                                     softcap=softcap, interpret=True)
+        o_r = ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                      softcap=softcap)
+        np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r),
+                                   atol=2e-5)
+
+    def test_block_size_invariance(self, rng):
+        from repro.kernels.flash_attention import flash_attention_pallas
+        q = jnp.asarray(rng.normal(size=(2, 256, 64)).astype(np.float32))
+        k = jnp.asarray(rng.normal(size=(2, 256, 64)).astype(np.float32))
+        v = jnp.asarray(rng.normal(size=(2, 256, 64)).astype(np.float32))
+        outs = [np.asarray(flash_attention_pallas(
+            q, k, v, block_q=bq, block_k=bk, interpret=True))
+            for bq, bk in ((256, 256), (128, 64), (64, 128))]
+        np.testing.assert_allclose(outs[0], outs[1], atol=1e-5)
+        np.testing.assert_allclose(outs[0], outs[2], atol=1e-5)
+
+    def test_vmem_budget_guard(self):
+        from repro.kernels.flash_attention import flash_attention_pallas
+        big = jnp.zeros((1, 65536, 128), jnp.float32)
+        with pytest.raises(ValueError, match="VMEM"):
+            flash_attention_pallas(big, big, big, interpret=True)
+
+    def test_bf16_inputs(self, rng):
+        from repro.kernels.flash_attention import flash_attention_pallas
+        q = jnp.asarray(rng.normal(size=(1, 128, 64))).astype(jnp.bfloat16)
+        k = jnp.asarray(rng.normal(size=(1, 128, 64))).astype(jnp.bfloat16)
+        v = jnp.asarray(rng.normal(size=(1, 128, 64))).astype(jnp.bfloat16)
+        o_k = flash_attention_pallas(q, k, v, block_q=64, block_k=64,
+                                     interpret=True)
+        o_r = ref.flash_attention_ref(q, k, v)
+        assert o_k.dtype == jnp.bfloat16
+        np.testing.assert_allclose(np.asarray(o_k, np.float32),
+                                   np.asarray(o_r, np.float32), atol=3e-2)

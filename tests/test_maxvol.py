@@ -1,0 +1,140 @@
+"""Fast MaxVol properties: greedy volume maximization, prefix consistency,
+classical-MaxVol dominance condition, Cross-2D baseline sanity (paper §3.1,
+Table 4)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import maxvol
+
+
+def _random_V(rng, K, R):
+    return jnp.asarray(rng.normal(size=(K, R)).astype(np.float32))
+
+
+class TestFastMaxvol:
+    def test_pivots_unique_and_valid(self, rng):
+        V = _random_V(rng, 100, 16)
+        piv, _ = maxvol.fast_maxvol(V, 16)
+        piv = np.asarray(piv)
+        assert len(set(piv.tolist())) == 16
+        assert piv.min() >= 0 and piv.max() < 100
+
+    def test_logvol_matches_slogdet(self, rng):
+        V = _random_V(rng, 64, 8)
+        piv, logvol = maxvol.fast_maxvol(V, 8)
+        _, ref = np.linalg.slogdet(np.asarray(V)[np.asarray(piv), :8])
+        np.testing.assert_allclose(float(logvol), ref, rtol=1e-4)
+
+    def test_beats_random_volume(self, rng):
+        """The greedy selection must dominate random subsets (paper's point)."""
+        V = _random_V(rng, 128, 12)
+        piv, _ = maxvol.fast_maxvol(V, 12)
+        _, sel = np.linalg.slogdet(np.asarray(V)[np.asarray(piv), :12])
+        rand = []
+        for _ in range(500):
+            idx = rng.choice(128, 12, replace=False)
+            _, ld = np.linalg.slogdet(np.asarray(V)[idx, :12])
+            rand.append(ld)
+        assert sel > np.max(rand) - 1e-6
+
+    def test_prefix_consistency(self, rng):
+        """fast_maxvol(V, r) pivots == first r pivots of fast_maxvol(V, R) —
+        the property that lets one sweep evaluate every candidate rank."""
+        V = _random_V(rng, 80, 16)
+        full, _ = maxvol.fast_maxvol(V, 16)
+        for r in (1, 4, 9, 15):
+            pref, _ = maxvol.fast_maxvol(V, r)
+            assert np.array_equal(np.asarray(pref), np.asarray(full)[:r])
+
+    def test_greedy_stepwise_optimal(self, rng):
+        """Each pivot maximizes |det| of the extended submatrix over all
+        remaining rows (Eq. 1 in the paper)."""
+        V = np.asarray(_random_V(rng, 40, 6))
+        piv = np.asarray(maxvol.fast_maxvol(jnp.asarray(V), 6)[0])
+        for j in range(1, 6):
+            base = list(piv[:j])
+            best_det, best_i = -1.0, None
+            for i in range(40):
+                if i in base:
+                    continue
+                d = abs(np.linalg.det(V[np.ix_(base + [i], list(range(j + 1)))]))
+                if d > best_det:
+                    best_det, best_i = d, i
+            chosen = abs(np.linalg.det(V[np.ix_(base + [piv[j]], list(range(j + 1)))]))
+            np.testing.assert_allclose(chosen, best_det, rtol=1e-4)
+
+    @settings(max_examples=25, deadline=None)
+    @given(K=st.integers(8, 64), R=st.integers(1, 8), seed=st.integers(0, 10_000))
+    def test_property_random_matrices(self, K, R, seed):
+        g = np.random.default_rng(seed)
+        R = min(R, K)
+        V = jnp.asarray(g.normal(size=(K, R)).astype(np.float32))
+        piv, logvol = maxvol.fast_maxvol(V, R)
+        piv = np.asarray(piv)
+        assert len(set(piv.tolist())) == R
+        assert np.isfinite(float(logvol))
+
+    def test_degenerate_rank_one_matrix(self):
+        """Rank-deficient input must not produce duplicate pivots or NaNs."""
+        u = np.linspace(1, 2, 32)[:, None].astype(np.float32)
+        V = jnp.asarray(u @ np.ones((1, 4), np.float32))
+        piv, logvol = maxvol.fast_maxvol(V, 4)
+        assert len(set(np.asarray(piv).tolist())) == 4
+        assert np.isfinite(float(logvol))
+
+
+class TestClassicMaxvol:
+    def test_dominance_condition(self, rng):
+        """After convergence every |B_ij| ≤ tol (Goreinov's criterion)."""
+        V = _random_V(rng, 64, 8)
+        piv = np.asarray(maxvol.maxvol_classic(V, 8, tol=1.05))
+        B = np.asarray(V)[:, :8] @ np.linalg.inv(np.asarray(V)[piv, :8])
+        assert np.abs(B).max() <= 1.05 + 1e-3
+
+    def test_at_least_fast_maxvol_volume(self, rng):
+        V = _random_V(rng, 64, 8)
+        fast, _ = maxvol.fast_maxvol(V, 8)
+        classic = maxvol.maxvol_classic(V, 8)
+        _, lv_fast = np.linalg.slogdet(np.asarray(V)[np.asarray(fast), :8])
+        _, lv_classic = np.linalg.slogdet(np.asarray(V)[np.asarray(classic), :8])
+        assert lv_classic >= lv_fast - 1e-5
+
+
+class TestCross2D:
+    def test_shapes_and_uniqueness(self, rng):
+        X = jnp.asarray(rng.normal(size=(60, 40)).astype(np.float32))
+        rows, cols = maxvol.cross2d_maxvol(X, 8)
+        assert len(set(np.asarray(rows).tolist())) == 8
+        assert len(set(np.asarray(cols).tolist())) == 8
+
+    def test_fast_maxvol_subspace_similarity_vs_cross2d(self, rng):
+        """Paper Table 4: Fast MaxVol matches-or-beats Cross-2D subspace
+        similarity ON AVERAGE (per-draw dominance is not guaranteed — the
+        benchmark reports the actual Table-4 numbers; here we gate on the
+        mean not regressing by more than 5%)."""
+        from repro.core.features import svd_features
+        sims_f, sims_c = [], []
+        for t in range(10):
+            g = np.random.default_rng(t)
+            # low-rank-ish data like real features
+            A = (g.normal(size=(80, 6)) @ g.normal(size=(6, 30)) +
+                 0.3 * g.normal(size=(80, 30))).astype(np.float32)
+            R = 6
+            V = svd_features(jnp.asarray(A), R)
+            piv_f, _ = maxvol.fast_maxvol(V, R)
+            rows_c, _ = maxvol.cross2d_maxvol(jnp.asarray(A), R)
+
+            def sim(rows):
+                sub = np.asarray(A)[np.asarray(rows)]
+                q1, _ = np.linalg.qr(sub.T)
+                full = np.linalg.svd(np.asarray(A).T, full_matrices=False)[0][:, :R]
+                s = np.linalg.svd(q1[:, :R].T @ full)[1]
+                return float(np.sum(s ** 2))
+
+            sims_f.append(sim(piv_f))
+            sims_c.append(sim(rows_c))
+        assert np.mean(sims_f) >= np.mean(sims_c) * 0.95, (
+            f"fast {np.mean(sims_f):.3f} vs cross2d {np.mean(sims_c):.3f}")

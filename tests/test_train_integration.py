@@ -1,0 +1,142 @@
+"""End-to-end training integration: GRAFT step vs baseline, convergence,
+checkpoint resume byte-exactness, serving driver."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch import serve as serve_lib
+from repro.launch import steps as steps_lib
+from repro.launch.train import RunConfig, train
+
+
+class TestTrainLoop:
+    def test_graft_training_reduces_loss(self, tmp_path):
+        run = RunConfig(arch="minicpm-2b", steps=30, batch=16, seq=32,
+                        use_graft=True, graft_rset=(4, 8), graft_refresh=5,
+                        lr=3e-3, log_every=100)
+        report = train(run)
+        losses = [h["loss"] for h in report["history"]]
+        assert losses[-1] < losses[0] - 0.1, (losses[0], losses[-1])
+        ranks = {h["rank"] for h in report["history"]}
+        assert ranks <= {4.0, 8.0}
+
+    def test_baseline_training_reduces_loss(self):
+        run = RunConfig(arch="minicpm-2b", steps=25, batch=8, seq=32,
+                        use_graft=False, lr=3e-3, log_every=100)
+        report = train(run)
+        losses = [h["loss"] for h in report["history"]]
+        assert losses[-1] < losses[0] - 0.1
+
+    def test_checkpoint_resume_is_exact(self, tmp_path):
+        """Train 20; vs train 10 → restart → 10 more: identical final loss."""
+        # NOTE: the interrupted leg must keep steps=20 — the LR schedule is
+        # a function of the TOTAL step budget, so "train 10 of 20" is
+        # expressed via stop_after (preemption), not by shrinking steps.
+        common = dict(arch="minicpm-2b", batch=8, seq=32, use_graft=True,
+                      graft_rset=(2, 4), graft_refresh=4, lr=1e-3,
+                      log_every=100, checkpoint_every=10, seed=3)
+        r_full = train(RunConfig(steps=20, **common))
+        ck = str(tmp_path / "ck")
+        train(RunConfig(steps=20, stop_after=10, checkpoint_dir=ck, **common))
+        r_resumed = train(RunConfig(steps=20, checkpoint_dir=ck, **common))
+        np.testing.assert_allclose(r_full["final_loss"],
+                                   r_resumed["final_loss"], rtol=1e-4)
+
+    def test_graft_metrics_present(self):
+        run = RunConfig(arch="stablelm-12b", steps=6, batch=8, seq=32,
+                        graft_rset=(2, 4), graft_refresh=2, log_every=100)
+        report = train(run)
+        h = report["history"][0]
+        for key in ("loss", "grad_norm", "rank", "proj_error", "alignment"):
+            assert key in h
+
+
+class TestGraftVsRandomSubset:
+    def test_graft_selects_better_than_random_on_skewed_batch(self, rng):
+        """On a batch with a few dominant directions, GRAFT's projection
+        error at rank R must beat random selection's (averaged)."""
+        from repro.core import graft
+        from repro.core.features import svd_features
+        from repro.core.projection import projection_error
+        d, K, R = 40, 64, 8
+        basis = rng.normal(size=(d, 3)).astype(np.float32)
+        G = (basis @ rng.normal(size=(3, K)) +
+             0.1 * rng.normal(size=(d, K))).astype(np.float32)
+        g_bar = jnp.asarray(G.mean(1))
+        Gj = jnp.asarray(G)
+        V = svd_features(Gj.T, R)
+        cfg = graft.GraftConfig(rset=(R,), eps=0.5)
+        state = graft.graft_select(cfg, V, Gj, g_bar, jnp.int32(0))
+        graft_err = float(state.last_error)
+        rand_errs = []
+        for t in range(30):
+            idx = np.random.default_rng(t).choice(K, R, replace=False)
+            rand_errs.append(float(projection_error(Gj[:, idx], g_bar)))
+        assert graft_err <= np.mean(rand_errs) + 1e-3, \
+            (graft_err, np.mean(rand_errs))
+
+
+class TestServe:
+    def test_wave_serving_completes_all_requests(self):
+        report = serve_lib.serve(arch="minicpm-2b", slots=3, requests=7,
+                                 max_new_tokens=6, max_seq=64)
+        assert report["requests"] == 7
+        ids = sorted(r["request_id"] for r in report["results"])
+        assert ids == list(range(7))
+        for r in report["results"]:
+            assert 1 <= len(r["tokens"]) <= 6
+
+    def test_serving_is_deterministic(self):
+        r1 = serve_lib.serve(arch="minicpm-2b", slots=2, requests=3,
+                             max_new_tokens=5, max_seq=64, seed=11)
+        r2 = serve_lib.serve(arch="minicpm-2b", slots=2, requests=3,
+                             max_new_tokens=5, max_seq=64, seed=11)
+        assert [r["tokens"] for r in r1["results"]] == \
+            [r["tokens"] for r in r2["results"]]
+
+
+class TestTrainStepUnits:
+    def test_train_state_logical_covers_state(self):
+        from repro import configs
+        from repro.launch.specs import default_train_config
+        mcfg = configs.get_smoke_config("qwen3-moe-235b-a22b")
+        tcfg = default_train_config("qwen3-moe-235b-a22b", batch=8)
+        abstract = jax.eval_shape(
+            lambda key: steps_lib.init_train_state(mcfg, tcfg, key, 8),
+            jax.ShapeDtypeStruct((2,), jnp.uint32))
+        logical = steps_lib.train_state_logical(mcfg, tcfg, abstract)
+        is_lg = lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x)
+        flat_a = jax.tree_util.tree_flatten(abstract)[0]
+        flat_l = jax.tree_util.tree_flatten(logical, is_leaf=is_lg)[0]
+        assert len(flat_a) == len(flat_l)
+
+    def test_adafactor_state_logical_drops_axis(self):
+        from repro import configs
+        from repro.launch.specs import default_train_config
+        mcfg = configs.get_smoke_config("kimi-k2-1t-a32b")
+        tcfg = default_train_config("kimi-k2-1t-a32b", batch=8)
+        assert tcfg.optimizer.name == "adafactor"
+        abstract = jax.eval_shape(
+            lambda key: steps_lib.init_train_state(mcfg, tcfg, key, 8),
+            jax.ShapeDtypeStruct((2,), jnp.uint32))
+        logical = steps_lib.train_state_logical(mcfg, tcfg, abstract)
+        # vr for a stacked (L, E, D, F) weight must have 3 entries
+        vr = logical["opt"]["v"]["blocks"]["moe"]["w_gate"]["vr"]
+        assert len(vr) == 4 - 1
+
+    def test_selection_inputs_shapes(self, rng):
+        from repro import configs
+        from repro.launch.specs import default_train_config
+        mcfg = configs.get_smoke_config("minicpm-2b")
+        tcfg = default_train_config("minicpm-2b", batch=8)
+        from repro.models import model as M
+        params = M.init_params(mcfg, jax.random.PRNGKey(0))
+        toks = jnp.asarray(rng.integers(0, mcfg.vocab_size, (8, 32)),
+                           dtype=jnp.int32)
+        V, G, gbar = steps_lib.selection_inputs(
+            mcfg, tcfg, params, {"tokens": toks, "labels": toks})
+        assert V.shape == (8, tcfg.graft.r_max)
+        assert G.shape == (mcfg.d_model, 8)
+        assert gbar.shape == (mcfg.d_model,)
