@@ -1,6 +1,8 @@
 """Paper Table 7 / §3.3: empirical complexity of the selection machinery —
 Fast MaxVol must scale O(K·R²), the projection sweep O(R·d); wall-clock and
-compiled-FLOP scaling are both reported."""
+compiled-FLOP scaling are both reported. A third section times every
+registered sampler through the selection engine on identical inputs, so
+strategy overheads are directly comparable."""
 from __future__ import annotations
 
 from typing import List
@@ -10,12 +12,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import csv_row, time_call
+from repro.compat import cost_analysis_dict
 from repro.core.maxvol import fast_maxvol
 from repro.core.projection import prefix_projection_errors
+from repro.selection import GraftConfig, engine, registry
 
 
 def _flops(fn, *args) -> float:
-    return jax.jit(fn).lower(*args).compile().cost_analysis().get("flops", 0.0)
+    compiled = jax.jit(fn).lower(*args).compile()
+    return cost_analysis_dict(compiled).get("flops", 0.0)
 
 
 def run() -> List[str]:
@@ -46,6 +51,19 @@ def run() -> List[str]:
         t = time_call(jax.jit(prefix_projection_errors), G, g)
         f = _flops(prefix_projection_errors, G, g)
         rows.append(csv_row(f"projsweep_d{d}_R{R_}", t, f"flops={f:.3e}"))
+
+    # every registered sampler through the engine on identical inputs
+    K, d, R_ = 256, 1024, 32
+    cfg = GraftConfig(rset=(8, 16, 32), eps=0.25)
+    V = jnp.asarray(rng.normal(size=(K, R_)).astype(np.float32))
+    G = jnp.asarray(rng.normal(size=(d, K)).astype(np.float32))
+    g_bar = jnp.mean(G, axis=1)
+    scores = jnp.asarray(rng.random(K).astype(np.float32))
+    for name in registry.available():
+        def call(v, g, gb, sc, n=name):
+            return engine.select_batch(cfg, n, v, g, gb, scores=sc)
+        t = time_call(call, V, G, g_bar, scores)
+        rows.append(csv_row(f"sampler_{name}_K{K}_d{d}", t, "registry-engine"))
 
     # derived scaling exponents (log-log slope)
     def slope(names, var_vals):

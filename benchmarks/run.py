@@ -17,7 +17,7 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--suite", default="all",
                     choices=["all", "maxvol", "features", "fraction",
-                             "alignment", "overhead", "roofline"])
+                             "alignment", "overhead", "sharded", "roofline"])
     args = ap.parse_args(argv)
 
     suites = []
@@ -36,6 +36,11 @@ def main(argv=None) -> int:
     if args.suite in ("all", "overhead"):
         from benchmarks import bench_selection_overhead
         suites.append(("overhead", bench_selection_overhead.run))
+    if args.suite in ("all", "sharded"):
+        # import first thing (before other suites pull in jax) to get the
+        # forced multi-device CPU topology when run standalone
+        from benchmarks import bench_sharded_selection
+        suites.append(("sharded", bench_sharded_selection.run))
     if args.suite in ("all", "roofline"):
         from benchmarks import roofline
         suites.append(("roofline", roofline.run))

@@ -17,7 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import CheckpointManager, EmergencySaver
-from repro.core.graft import GraftConfig
+from repro.selection import GraftConfig
 from repro.data import DataConfig, SyntheticLM
 from repro.distributed import sharding as sh
 from repro.launch import steps as steps_lib
@@ -37,7 +37,7 @@ PRESETS = {
 }
 
 
-def build(preset: str, use_graft: bool, steps: int):
+def build(preset: str, use_graft: bool, steps: int, sampler: str = "graft"):
     p = dict(PRESETS[preset])
     batch, seq = p.pop("batch"), p.pop("seq")
     mcfg = ModelConfig(name=f"lm-{preset}", family="dense",
@@ -48,14 +48,14 @@ def build(preset: str, use_graft: bool, steps: int):
         optimizer=OptimizerConfig(name="adamw", learning_rate=3e-4,
                                   schedule="cosine", total_steps=steps,
                                   warmup_steps=max(steps // 20, 1)),
-        graft=graft, probe_positions=64)
+        graft=graft, sampler=sampler, probe_positions=64)
     data = SyntheticLM(DataConfig(vocab_size=mcfg.vocab_size, seq_len=seq,
                                   global_batch=batch, seed=0))
     return mcfg, tcfg, data, batch
 
 
-def run(preset: str, steps: int, use_graft: bool, ckpt_dir):
-    mcfg, tcfg, data, batch = build(preset, use_graft, steps)
+def run(preset: str, steps: int, use_graft: bool, ckpt_dir, sampler: str = "graft"):
+    mcfg, tcfg, data, batch = build(preset, use_graft, steps, sampler)
     mesh = make_host_mesh()
     step_fn = jax.jit(steps_lib.make_train_step(mcfg, tcfg), donate_argnums=(0,))
     ckpt = CheckpointManager(ckpt_dir, keep_last_n=2, async_save=True) if ckpt_dir else None
@@ -95,10 +95,14 @@ def main():
     ap.add_argument("--preset", default="cpu", choices=list(PRESETS))
     ap.add_argument("--steps", type=int, default=120)
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--sampler", default="graft",
+                    help="subset strategy from the repro.selection registry "
+                         "(graft | random | loss_topk | el2n | ...)")
     ap.add_argument("--compare", action="store_true",
                     help="also run the full-batch baseline for comparison")
     args = ap.parse_args()
-    graft_losses = run(args.preset, args.steps, True, args.ckpt_dir)
+    graft_losses = run(args.preset, args.steps, True, args.ckpt_dir,
+                       sampler=args.sampler)
     out = {"graft_final": graft_losses[-1], "graft_first": graft_losses[0]}
     if args.compare:
         base_losses = run(args.preset, args.steps, False, None)

@@ -1,0 +1,35 @@
+"""Small shims over jax APIs that moved between releases.
+
+Everything here must work on the pinned CI version (jax 0.4.x) AND on
+newer releases, so call sites never branch on ``jax.__version__``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+try:                                        # jax >= 0.6: top-level export
+    from jax import shard_map               # type: ignore[attr-defined]
+except ImportError:                         # jax 0.4.x
+    from jax.experimental.shard_map import shard_map  # noqa: F401
+
+try:                                        # jax >= 0.5: varying-axis marker
+    from jax.lax import pvary               # type: ignore[attr-defined]
+except ImportError:
+    def pvary(x, axis_names):               # 0.4.x has no vma tracking:
+        del axis_names                      # every value is already treated
+        return x                            # as device-varying inside shard_map
+
+
+def cost_analysis_dict(compiled) -> Dict[str, Any]:
+    """``Compiled.cost_analysis()`` as a flat dict.
+
+    jax 0.4.x returns a single-element list of dicts (one per partition);
+    newer releases return the dict directly. ``None`` (backend without cost
+    analysis) becomes ``{}``.
+    """
+    cost = compiled.cost_analysis()
+    if cost is None:
+        return {}
+    if isinstance(cost, (list, tuple)):
+        return dict(cost[0]) if cost else {}
+    return dict(cost)

@@ -1,138 +1,16 @@
-"""GRAFT selector — the paper's Algorithm 1 as a jit-able JAX module.
+"""Compatibility shim — the GRAFT selector moved to ``repro.selection``.
 
-Pipeline per refresh step (every ``S`` iterations):
-  1. features: V = f(batch) ∈ R^{K×R_max}, relevance-ordered columns
-  2. Fast MaxVol: pivot order p (prefixes = candidate subsets for every rank)
-  3. gradient matrix G[:, j] = grad-embedding of sample p_j; ḡ = batch mean
-  4. prefix projection errors d_r; R* = smallest candidate rank with d ≤ ε
-  5. emit (pivots, R*, weights) — weights mask pivots beyond R* so downstream
-     train steps keep a static shape (R_max) while training on R* samples.
-
-Between refreshes the previous selection is reused (Alg. 1 'else' branch).
+The single-batch, single-device selector this module used to implement is
+now one engine of the sampler-generic selection subsystem
+(``repro.selection``): see ``selection/graft.py`` for the algorithm,
+``selection/engine.py`` for the vmapped multi-batch and shard_map
+data-parallel paths. Existing imports keep working; new code should import
+from ``repro.selection``.
 """
-from __future__ import annotations
+from repro.selection.base import GraftConfig, SelectionState, init_state
+from repro.selection.graft import (GraftState, _maxvol, _prefix_errors,  # noqa: F401
+                                   graft_select, maybe_refresh,
+                                   select_from_batch)
 
-import dataclasses
-import functools
-from typing import NamedTuple, Optional, Tuple
-
-import jax
-import jax.numpy as jnp
-
-from repro.core import features as feat_lib
-from repro.core import maxvol as maxvol_lib
-from repro.core import projection as proj_lib
-
-
-@dataclasses.dataclass(frozen=True)
-class GraftConfig:
-    """Static GRAFT hyper-parameters (hashable; safe as a jit static arg)."""
-    rset: Tuple[int, ...] = (8, 16, 32, 64)   # candidate ranks, ascending
-    eps: float = 0.25                          # projection-error threshold
-    refresh_every: int = 20                    # S in the paper (20–50)
-    feature_mode: str = "svd"                 # svd | pca | ica | encoder
-    grad_mode: str = "probe"                  # probe | full | logit_embed
-    use_pallas: bool = False                   # TPU kernels vs jnp reference
-
-    def __post_init__(self):
-        if tuple(sorted(self.rset)) != tuple(self.rset):
-            raise ValueError("rset must be ascending")
-
-    @property
-    def r_max(self) -> int:
-        return self.rset[-1]
-
-
-class GraftState(NamedTuple):
-    """Carried across training steps (replicated; tiny)."""
-    pivots: jax.Array        # (R_max,) int32 — current subset, pivot order
-    weights: jax.Array       # (R_max,) f32 — 1/R* for active, 0 for inactive
-    rank: jax.Array          # () int32 — current R*
-    last_error: jax.Array    # () f32 — projection error at R*
-    alignment: jax.Array     # () f32 — cos(subset ḡ, batch ḡ) diagnostic
-    step: jax.Array          # () int32
-
-
-def init_state(cfg: GraftConfig, batch_size: int) -> GraftState:
-    r = cfg.r_max
-    if r > batch_size:
-        raise ValueError(f"r_max {r} > batch size {batch_size}")
-    return GraftState(
-        pivots=jnp.arange(r, dtype=jnp.int32),
-        weights=jnp.full((r,), 1.0 / r, dtype=jnp.float32),
-        rank=jnp.int32(r),
-        last_error=jnp.float32(1.0),
-        alignment=jnp.float32(0.0),
-        step=jnp.int32(0),
-    )
-
-
-def _maxvol(V: jax.Array, rank: int, use_pallas: bool) -> jax.Array:
-    if use_pallas:
-        from repro.kernels import ops as kernel_ops
-        return kernel_ops.fast_maxvol(V, rank)
-    pivots, _ = maxvol_lib.fast_maxvol(V, rank)
-    return pivots
-
-
-def _prefix_errors(G: jax.Array, g_bar: jax.Array, use_pallas: bool) -> jax.Array:
-    if use_pallas:
-        from repro.kernels import ops as kernel_ops
-        return kernel_ops.projection_sweep(G, g_bar)
-    return proj_lib.prefix_projection_errors(G, g_bar)
-
-
-@functools.partial(jax.jit, static_argnames=("cfg",))
-def graft_select(cfg: GraftConfig, V: jax.Array, G: jax.Array,
-                 g_bar: jax.Array, step: jax.Array) -> GraftState:
-    """One selection refresh. V: (K, R_max) features (relevance-ordered);
-    G: (d, K) per-sample grad embeddings; ḡ: (d,). Returns new GraftState."""
-    r_max = cfg.r_max
-    pivots = _maxvol(V, r_max, cfg.use_pallas)             # (R_max,)
-    G_sel = jnp.take(G, pivots, axis=1)                    # (d, R_max), pivot order
-    errors = _prefix_errors(G_sel, g_bar, cfg.use_pallas)  # (R_max,)
-    rank, err = proj_lib.select_rank(errors, cfg.rset, cfg.eps)
-
-    active = (jnp.arange(r_max) < rank).astype(jnp.float32)
-    weights = active / jnp.maximum(jnp.sum(active), 1.0)
-    g_sub = G_sel @ weights                                # subset mean gradient
-    align = proj_lib.cosine_alignment(g_sub, g_bar)
-    return GraftState(pivots=pivots, weights=weights, rank=rank,
-                      last_error=err, alignment=align, step=step)
-
-
-def maybe_refresh(cfg: GraftConfig, state: GraftState, step: jax.Array,
-                  V: jax.Array, G: jax.Array, g_bar: jax.Array) -> GraftState:
-    """Alg. 1 outer branch: refresh every S steps, else carry the old subset."""
-    def do_refresh(_):
-        return graft_select(cfg, V, G, g_bar, step)
-
-    def keep(_):
-        return state._replace(step=step)
-
-    return jax.lax.cond(step % cfg.refresh_every == 0, do_refresh, keep, None)
-
-
-# ---------------------------------------------------------------------------
-# convenience: full selection from a raw batch matrix (paper's CNN/MLP path)
-# ---------------------------------------------------------------------------
-
-def select_from_batch(cfg: GraftConfig, batch_matrix: jax.Array,
-                      loss_fn=None, params=None,
-                      grad_fn_outputs: Optional[Tuple[jax.Array, jax.Array]] = None,
-                      step: int = 0) -> GraftState:
-    """End-to-end selection when the batch is a plain (K, M) matrix.
-
-    ``grad_fn_outputs``: optional precomputed (G (d,K), ḡ (d,)). If absent and
-    ``loss_fn``/``params`` given, exact per-sample grads are used (small
-    models). Features always from ``cfg.feature_mode`` on the raw batch.
-    """
-    from repro.core import grad_features as gf
-    V = feat_lib.extract(cfg.feature_mode, batch_matrix, cfg.r_max)
-    if grad_fn_outputs is not None:
-        G, g_bar = grad_fn_outputs
-    else:
-        if loss_fn is None or params is None:
-            raise ValueError("need loss_fn+params or grad_fn_outputs")
-        G, g_bar = gf.per_sample_grads_full(loss_fn, params, batch_matrix)
-    return graft_select(cfg, V, G, g_bar, jnp.int32(step))
+__all__ = ["GraftConfig", "GraftState", "SelectionState", "init_state",
+           "graft_select", "maybe_refresh", "select_from_batch"]

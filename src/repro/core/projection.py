@@ -53,19 +53,21 @@ def prefix_projection_errors(G: jax.Array, g_bar: jax.Array) -> jax.Array:
 
 @functools.partial(jax.jit, static_argnames=("rset",))
 def select_rank(errors: jax.Array, rset: Tuple[int, ...], eps: float) -> Tuple[jax.Array, jax.Array]:
-    """Smallest candidate rank whose error ≤ eps (else the minimizing rank).
+    """Smallest candidate rank whose error ≤ eps (else fall back to R_max).
 
     ``errors``: prefix errors of shape (R_max,). ``rset``: static ascending
     candidate ranks. Returns ``(rank, err_at_rank)`` as traced scalars.
+    When no candidate satisfies eps the largest candidate wins — by Lemma 1
+    the errors are monotone non-increasing, so R_max is also the error
+    minimizer, and an argmin tie-break must never pick a SMALLER rank (flat
+    error plateaus would otherwise collapse the subset).
     """
     cand = jnp.asarray(rset, dtype=jnp.int32)
     cand_err = errors[cand - 1]
     ok = cand_err <= eps
     any_ok = jnp.any(ok)
-    # first satisfying rank (rset ascending) or global argmin as fallback
     first_ok = jnp.argmax(ok)            # first True (0 if none — masked below)
-    best = jnp.argmin(cand_err)
-    idx = jnp.where(any_ok, first_ok, best)
+    idx = jnp.where(any_ok, first_ok, len(rset) - 1)
     return cand[idx], cand_err[idx]
 
 

@@ -89,6 +89,14 @@ class SyntheticLM:
                         cfg.num_clusters - 1)
         return {"tokens": tokens[:, :-1], "labels": tokens[:, 1:]}
 
+    def microbatch_stack(self, step: int, num_micro: int) -> Dict[str, np.ndarray]:
+        """``num_micro`` consecutive batches stacked on a new leading axis —
+        the input layout of the vmapped multi-batch selection path
+        (``repro.selection.engine.select_multi_batch``): one jit selects for
+        every microbatch at once. Does not advance the iterator."""
+        stack = [self.batch_at(step + i) for i in range(num_micro)]
+        return {k: np.stack([b[k] for b in stack]) for k in stack[0]}
+
     def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
         while True:
             b = self.batch_at(self._step)

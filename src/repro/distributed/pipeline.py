@@ -20,6 +20,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.compat import pvary, shard_map
+
 
 def pipeline_forward(layer_fn: Callable, stage_params, x_micro: jax.Array,
                      mesh: Mesh, axis: str = "pod") -> jax.Array:
@@ -39,8 +41,8 @@ def pipeline_forward(layer_fn: Callable, stage_params, x_micro: jax.Array,
         stage = jax.lax.axis_index(axis)
         p_local = jax.tree_util.tree_map(lambda a: a[0], params_s)
         # carries are device-varying (they hold per-stage state) — mark them
-        buf = jax.lax.pvary(jnp.zeros_like(x_all[0]), (axis,))    # (mb, …)
-        outs = jax.lax.pvary(jnp.zeros_like(x_all), (axis,))      # (M, mb, …)
+        buf = pvary(jnp.zeros_like(x_all[0]), (axis,))    # (mb, …)
+        outs = pvary(jnp.zeros_like(x_all), (axis,))      # (M, mb, …)
 
         def tick(t, carry):
             buf, outs = carry
@@ -67,9 +69,9 @@ def pipeline_forward(layer_fn: Callable, stage_params, x_micro: jax.Array,
         return jax.lax.psum(outs, axis)
 
     specs_params = jax.tree_util.tree_map(lambda _: P(axis), stage_params)
-    fn = jax.shard_map(per_stage, mesh=mesh,
-                       in_specs=(specs_params, P()),
-                       out_specs=P())
+    fn = shard_map(per_stage, mesh=mesh,
+                   in_specs=(specs_params, P()),
+                   out_specs=P())
     return fn(stage_params, x_micro)
 
 

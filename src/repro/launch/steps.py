@@ -17,13 +17,15 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import graft as graft_lib
 from repro.core.features import svd_features
 from repro.core.grad_features import logit_error_embeddings
 from repro.distributed.sharding import constrain
 from repro.models import decode as decode_lib
 from repro.models import model as model_lib
 from repro.optim import OptimizerConfig, make_optimizer
+from repro.selection import base as selection_base
+from repro.selection import graft as graft_lib
+from repro.selection import registry as sampler_registry
 
 PyTree = Any
 
@@ -32,6 +34,7 @@ PyTree = Any
 class TrainConfig:
     optimizer: OptimizerConfig = OptimizerConfig()
     graft: Optional[graft_lib.GraftConfig] = None
+    sampler: str = "graft"          # registry name; any repro.selection sampler
     probe_positions: int = 256      # positions per sequence for grad embeddings
                                     # (0 = all; the paper's K×M regime is tiny)
     microbatches: int = 1           # >1: sequential accumulation (§Perf memory lever)
@@ -100,12 +103,14 @@ def train_state_logical(mcfg, tcfg: TrainConfig, abstract_state):
 # ---------------------------------------------------------------------------
 
 def selection_inputs(mcfg, tcfg: TrainConfig, params, batch
-                     ) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """One full-batch forward → (V (K,R_max), G (d,K), ḡ (d,)).
+                     ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """One full-batch forward → (V (K,R_max), G (d,K), ḡ (d,), scores (K,)).
 
     Features = relevance-ordered SVD of mean-pooled final hiddens (the
     paper's encoder/'Warm' feature path); gradient embeddings = per-example
-    probe gradients from the softmax error signal (no extra backward).
+    probe gradients from the softmax error signal (no extra backward);
+    scores = per-example probe cross-entropy (drives ``loss_topk``-style
+    samplers for free — same logits).
     """
     h, mask = model_lib.forward_hiddens(mcfg, params, batch)
     h = jax.lax.stop_gradient(h)
@@ -121,13 +126,16 @@ def selection_inputs(mcfg, tcfg: TrainConfig, params, batch
     logits = model_lib.logits_from_hiddens(mcfg, params, hp)
     emb = logit_error_embeddings(logits, lp, hp)   # (K, E) f32
     emb = constrain(emb, ("act_batch", None))
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    scores = -jnp.mean(jnp.take_along_axis(logp, lp[..., None], axis=-1)[..., 0],
+                       axis=-1)                    # (K,) probe CE per example
     # the K×R feature/gradient matrices are tiny — replicate for MaxVol
     pooled = jnp.sum(h.astype(jnp.float32) * mask[..., None], axis=1) / \
         jnp.maximum(jnp.sum(mask, axis=1), 1.0)[:, None]
     V = svd_features(pooled, tcfg.graft.r_max)
     G = emb.T                                      # (d=E, K)
     g_bar = jnp.mean(emb, axis=0)
-    return V, G, g_bar
+    return V, G, g_bar, scores
 
 
 def _take_batch(batch, pivots: jax.Array, k_global: int):
@@ -169,14 +177,18 @@ def baseline_train_step(mcfg, tcfg: TrainConfig, state, batch):
 
 
 def graft_train_step(mcfg, tcfg: TrainConfig, state, batch):
-    """The paper's Algorithm 1 as one jitted step."""
+    """Alg. 1 as one jitted step, sampler-generic: the subset strategy is
+    resolved from the registry by ``tcfg.sampler`` (default: GRAFT)."""
     gcfg = tcfg.graft
+    smp = sampler_registry.get_sampler(tcfg.sampler)
     opt = make_optimizer(tcfg.optimizer)
     k_global = jax.tree_util.tree_leaves(batch)[0].shape[0]
 
     def do_select(_):
-        V, G, g_bar = selection_inputs(mcfg, tcfg, state["params"], batch)
-        return graft_lib.graft_select(gcfg, V, G, g_bar, state["step"])
+        V, G, g_bar, scores = selection_inputs(mcfg, tcfg, state["params"], batch)
+        # key=None: stochastic samplers derive a step-folded key themselves
+        return smp.select(gcfg, selection_base.SelectionInputs(
+            V, G, g_bar, scores), state["step"])
 
     if gcfg.refresh_every == 1:
         graft_state = do_select(None)
@@ -231,8 +243,10 @@ def subset_train_step(mcfg, tcfg: TrainConfig, state, batch):
 def selection_step(mcfg, tcfg: TrainConfig, state, batch):
     """Selection only (features + grad embeddings + MaxVol + rank sweep) —
     isolates the refresh cost for the amortization analysis (§Perf)."""
-    V, G, g_bar = selection_inputs(mcfg, tcfg, state["params"], batch)
-    graft_state = graft_lib.graft_select(tcfg.graft, V, G, g_bar, state["step"])
+    smp = sampler_registry.get_sampler(tcfg.sampler)
+    V, G, g_bar, scores = selection_inputs(mcfg, tcfg, state["params"], batch)
+    graft_state = smp.select(tcfg.graft, selection_base.SelectionInputs(
+        V, G, g_bar, scores), state["step"])
     new_state = dict(state, graft=graft_state)
     return new_state, {"rank": graft_state.rank,
                        "proj_error": graft_state.last_error}

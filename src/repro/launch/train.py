@@ -39,6 +39,7 @@ class RunConfig:
     batch: int = 16
     seq: int = 64
     use_graft: bool = True
+    sampler: str = "graft"              # any repro.selection registry name
     graft_rset: tuple = (2, 4, 8)
     graft_eps: float = 0.25
     graft_refresh: int = 5
@@ -64,7 +65,7 @@ def build(run: RunConfig):
         optimizer=OptimizerConfig(name=run.optimizer, learning_rate=run.lr,
                                   schedule="cosine", total_steps=run.steps,
                                   warmup_steps=max(run.steps // 20, 1)),
-        graft=graft, probe_positions=min(64, run.seq))
+        graft=graft, sampler=run.sampler, probe_positions=min(64, run.seq))
     data = SyntheticLM(DataConfig(vocab_size=mcfg.vocab_size, seq_len=run.seq,
                                   global_batch=run.batch, seed=run.seed))
     return mcfg, tcfg, data
@@ -157,13 +158,15 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=16)
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--no-graft", action="store_true")
+    ap.add_argument("--sampler", default="graft",
+                    help="selection strategy (see repro.selection.available())")
     ap.add_argument("--full-config", action="store_true")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     run = RunConfig(arch=args.arch, smoke=not args.full_config,
                     steps=args.steps, batch=args.batch, seq=args.seq,
-                    use_graft=not args.no_graft,
+                    use_graft=not args.no_graft, sampler=args.sampler,
                     checkpoint_dir=args.ckpt_dir, seed=args.seed)
     report = train(run)
     print(json.dumps({k: v for k, v in report.items() if k != "history"},

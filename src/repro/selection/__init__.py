@@ -1,0 +1,32 @@
+"""Subset-selection subsystem: sampler registry + execution engines.
+
+Quick tour::
+
+    from repro.selection import engine, registry
+    from repro.selection.base import GraftConfig
+
+    cfg = GraftConfig(rset=(4, 8, 16))
+    state = engine.select_batch(cfg, "graft", V, G, g_bar)       # one batch
+    states = engine.select_multi_batch(cfg, "graft", Vs, Gs, gbs)  # vmapped
+    state = engine.select_sharded(cfg, mesh, V, G)               # shard_map DP
+
+``registry.available()`` lists samplers; add your own with
+``registry.register(Sampler(name, fn))``.
+"""
+from repro.selection import samplers as _samplers  # noqa: F401 (registers defaults)
+from repro.selection.base import (GraftConfig, Sampler, SamplerConfig,
+                                  SelectionInputs, SelectionState, init_state)
+from repro.selection.engine import (make_sharded_selector, select_batch,
+                                    select_multi_batch, select_sharded)
+from repro.selection.graft import (GraftState, graft_select, maybe_refresh,
+                                   select_from_batch)
+from repro.selection.registry import available, get_sampler, register
+
+__all__ = [
+    "GraftConfig", "SamplerConfig", "Sampler", "SelectionInputs",
+    "SelectionState", "GraftState", "init_state",
+    "graft_select", "maybe_refresh", "select_from_batch",
+    "select_batch", "select_multi_batch", "select_sharded",
+    "make_sharded_selector",
+    "available", "get_sampler", "register",
+]

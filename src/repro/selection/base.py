@@ -1,0 +1,118 @@
+"""Sampler protocol + shared state for the selection engine.
+
+Every subset sampler (GRAFT, random, loss-topk, the coreset baselines)
+implements one signature — ``fn(cfg, inputs, step) -> SelectionState`` — so
+the train step, the vmapped multi-batch path and the shard_map data-parallel
+path in ``engine.py`` are sampler-agnostic. The config object is the paper's
+``GraftConfig``: non-GRAFT samplers read only ``r_max`` (subset size budget)
+and ``use_pallas`` from it, so one config drives every strategy in a sweep.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class GraftConfig:
+    """Static selection hyper-parameters (hashable; safe as a jit static arg)."""
+    rset: Tuple[int, ...] = (8, 16, 32, 64)   # candidate ranks, ascending
+    eps: float = 0.25                          # projection-error threshold
+    refresh_every: int = 20                    # S in the paper (20–50)
+    feature_mode: str = "svd"                 # svd | pca | ica | encoder
+    grad_mode: str = "probe"                  # probe | full | logit_embed
+    use_pallas: bool = False                   # TPU kernels vs jnp reference
+
+    def __post_init__(self):
+        if tuple(sorted(self.rset)) != tuple(self.rset):
+            raise ValueError("rset must be ascending")
+
+    @property
+    def r_max(self) -> int:
+        return self.rset[-1]
+
+
+# alias for sampler-generic call sites (the config is not GRAFT-specific)
+SamplerConfig = GraftConfig
+
+
+class SelectionState(NamedTuple):
+    """Carried across training steps (replicated; tiny)."""
+    pivots: jax.Array        # (R_max,) int32 — current subset, pivot order
+    weights: jax.Array       # (R_max,) f32 — sum 1 over active, 0 inactive
+    rank: jax.Array          # () int32 — current R*
+    last_error: jax.Array    # () f32 — projection error at R*
+    alignment: jax.Array     # () f32 — cos(subset ḡ, batch ḡ) diagnostic
+    step: jax.Array          # () int32
+
+
+class SelectionInputs(NamedTuple):
+    """Per-batch selection inputs. ``V``/``G``/``g_bar`` as in the paper;
+    ``scores`` are per-sample scalars (e.g. loss) for score-ranked samplers;
+    ``key`` drives stochastic samplers. Optional fields may be ``None`` for
+    samplers that don't read them (``None`` is pytree-transparent, so the
+    vmapped/sharded engines can still map over the tuple)."""
+    V: jax.Array                       # (K, R_max) relevance-ordered features
+    G: jax.Array                       # (d, K) per-sample grad embeddings
+    g_bar: jax.Array                   # (d,) batch mean gradient
+    scores: Optional[jax.Array] = None  # (K,) per-sample scores
+    key: Optional[jax.Array] = None     # PRNG key
+
+
+def init_state(cfg: GraftConfig, batch_size: int) -> SelectionState:
+    r = cfg.r_max
+    if r > batch_size:
+        raise ValueError(f"r_max {r} > batch size {batch_size}")
+    return SelectionState(
+        pivots=jnp.arange(r, dtype=jnp.int32),
+        weights=jnp.full((r,), 1.0 / r, dtype=jnp.float32),
+        rank=jnp.int32(r),
+        last_error=jnp.float32(1.0),
+        alignment=jnp.float32(0.0),
+        step=jnp.int32(0),
+    )
+
+
+def finalize_state(cfg: GraftConfig, pivots: jax.Array, weights: jax.Array,
+                   rank: jax.Array, G: jax.Array, g_bar: jax.Array,
+                   step: jax.Array) -> SelectionState:
+    """Fill the diagnostic fields every sampler shares: the projection error
+    of the active selected gradients and the subset/batch alignment."""
+    from repro.core import projection as proj_lib
+    G_sel = jnp.take(G, pivots, axis=1)                 # (d, R_max)
+    active = (weights > 0).astype(jnp.float32)
+    # error over ONLY the active columns: the MGS sweep skips zeroed columns
+    # (zero captured energy), whereas a QR of the masked matrix would invent
+    # orthonormal completion directions for them and under-report the error
+    err = proj_lib.prefix_projection_errors(G_sel * active[None, :], g_bar)[-1]
+    g_sub = G_sel @ weights
+    align = proj_lib.cosine_alignment(g_sub, g_bar)
+    return SelectionState(pivots=pivots.astype(jnp.int32), weights=weights,
+                          rank=jnp.int32(rank), last_error=err,
+                          alignment=align, step=jnp.int32(step))
+
+
+@dataclasses.dataclass(frozen=True)
+class Sampler:
+    """A registered selection strategy.
+
+    ``fn(cfg, inputs, step) -> SelectionState`` must be jit/vmap-traceable
+    for a fixed ``cfg``. ``needs_scores``/``needs_key`` document (and let the
+    engine validate) which optional inputs the strategy reads.
+    """
+    name: str
+    fn: Callable[[GraftConfig, SelectionInputs, jax.Array], SelectionState]
+    needs_scores: bool = False
+    needs_key: bool = False
+
+    def select(self, cfg: GraftConfig, inputs: SelectionInputs,
+               step=0) -> SelectionState:
+        if self.needs_scores and inputs.scores is None:
+            raise ValueError(f"sampler '{self.name}' requires SelectionInputs.scores")
+        return self.fn(cfg, inputs, jnp.int32(step))
+
+    def init_state(self, cfg: GraftConfig, batch_size: int) -> SelectionState:
+        return init_state(cfg, batch_size)

@@ -1,0 +1,202 @@
+"""Selection execution engines: single-batch, vmapped multi-batch, and
+shard_map data-parallel.
+
+Three ways to run one sampler:
+
+  * :func:`select_batch` — one (K, R_max) batch on one device (the seed
+    repo's only path, now sampler-generic).
+  * :func:`select_multi_batch` — a stack of B per-device microbatches
+    selected under ONE jit via vmap: compile once, select everywhere.
+  * :func:`make_sharded_selector` — GRAFT over the data-parallel mesh axes.
+    V/G are sharded along K by the ``act_batch`` logical rule from
+    ``distributed/sharding.py``; each shard runs Fast MaxVol on its local
+    rows and the prefix projection-error statistics are psum'd so every
+    shard applies the same globally-decided rank R*.
+
+Engines cache one jitted callable per (cfg, sampler) pair, so repeated calls
+from a training loop never re-trace.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.compat import shard_map
+from repro.core import projection as proj_lib
+from repro.distributed import sharding as sh
+from repro.selection import graft as graft_lib
+from repro.selection import registry
+from repro.selection.base import (GraftConfig, Sampler, SelectionInputs,
+                                  SelectionState)
+
+SamplerLike = Union[str, Sampler]
+
+
+def _default_key(step) -> jax.Array:
+    return jax.random.fold_in(jax.random.PRNGKey(0), jnp.int32(step))
+
+
+def _resolve(cfg: GraftConfig, sampler: SamplerLike, scores) -> Sampler:
+    smp = registry.get_sampler(sampler)
+    if smp.needs_scores and scores is None:
+        raise ValueError(f"sampler '{smp.name}' requires per-sample scores")
+    return smp
+
+
+# ---------------------------------------------------------------------------
+# single batch
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=64)
+def _single_batch_compiled(cfg: GraftConfig, smp: Sampler):
+    # keyed on the Sampler VALUE (frozen dataclass), not its name, so a
+    # re-registration under the same name gets its own compiled entry
+    def fn(V, G, g_bar, scores, key, step):
+        return smp.fn(cfg, SelectionInputs(V, G, g_bar, scores, key), step)
+
+    return jax.jit(fn)
+
+
+def select_batch(cfg: GraftConfig, sampler: SamplerLike, V: jax.Array,
+                 G: jax.Array, g_bar: jax.Array, *,
+                 scores: Optional[jax.Array] = None,
+                 key: Optional[jax.Array] = None, step=0) -> SelectionState:
+    """Run ``sampler`` on one (K, R_max) batch. Registry-resolved, jit-cached."""
+    smp = _resolve(cfg, sampler, scores)
+    if scores is None:
+        scores = jnp.zeros((V.shape[0],), jnp.float32)
+    if key is None:
+        key = _default_key(step)
+    return _single_batch_compiled(cfg, smp)(
+        V, G, g_bar, scores, key, jnp.int32(step))
+
+
+# ---------------------------------------------------------------------------
+# vmapped multi-batch
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=64)
+def _multi_batch_compiled(cfg: GraftConfig, smp: Sampler):
+    def fn(V, G, g_bar, scores, keys, step):
+        def one(v, g, gb, sc, k):
+            return smp.fn(cfg, SelectionInputs(v, g, gb, sc, k), step)
+        return jax.vmap(one)(V, G, g_bar, scores, keys)
+
+    return jax.jit(fn)
+
+
+def select_multi_batch(cfg: GraftConfig, sampler: SamplerLike, V: jax.Array,
+                       G: jax.Array, g_bar: jax.Array, *,
+                       scores: Optional[jax.Array] = None,
+                       keys: Optional[jax.Array] = None,
+                       step=0) -> SelectionState:
+    """Select for a STACK of microbatches under one jit.
+
+    ``V``: (B, K, R_max); ``G``: (B, d, K); ``g_bar``: (B, d); optional
+    ``scores``: (B, K) and ``keys``: (B, 2) per-microbatch PRNG keys.
+    Returns a :class:`SelectionState` whose fields carry a leading B axis —
+    semantically identical to a Python loop of :func:`select_batch` calls,
+    but compiled once and batched on-device.
+    """
+    smp = _resolve(cfg, sampler, scores)
+    B = V.shape[0]
+    if scores is None:
+        scores = jnp.zeros(V.shape[:2], jnp.float32)
+    if keys is None:
+        keys = jax.random.split(_default_key(step), B)
+    return _multi_batch_compiled(cfg, smp)(
+        V, G, g_bar, scores, keys, jnp.int32(step))
+
+
+# ---------------------------------------------------------------------------
+# shard_map data-parallel GRAFT
+# ---------------------------------------------------------------------------
+
+def _batch_axes(mesh: Mesh, batch_logical: str, rules):
+    """Mesh axis names the logical rule table maps ``batch_logical`` to."""
+    entry = tuple(sh.logical_to_spec((batch_logical,), mesh, rules))[0]
+    if entry is None:
+        raise ValueError(
+            f"logical axis '{batch_logical}' maps to no axis of mesh "
+            f"{mesh.axis_names}; nothing to shard selection over")
+    axes = (entry,) if isinstance(entry, str) else tuple(entry)
+    return entry, axes
+
+
+def make_sharded_selector(cfg: GraftConfig, mesh: Mesh, *,
+                          batch_logical: str = "act_batch", rules=None):
+    """Build (or fetch the cached) jitted data-parallel GRAFT selector.
+
+    Returns ``fn(V, G, step) -> SelectionState`` where V (K, R_max) and
+    G (d, K) are sharded along K over the mesh axes assigned to
+    ``batch_logical`` (n_shards ways). Per shard: Fast MaxVol on the local
+    K/n rows. Globally: ḡ and the prefix projection errors are averaged by
+    psum so the rank decision R* is identical on every shard. The returned
+    state concatenates the shards — pivots/weights have shape
+    (n_shards·R_max,) with GLOBAL row indices and weights summing to 1 over
+    the n_shards·R* active entries; ``rank`` is the per-shard R*.
+    """
+    rules_key = tuple(sorted(rules.items())) if rules else None
+    return _sharded_selector_cached(cfg, mesh, batch_logical, rules_key)
+
+
+@functools.lru_cache(maxsize=64)
+def _sharded_selector_cached(cfg: GraftConfig, mesh: Mesh,
+                             batch_logical: str, rules_key):
+    rules = dict(rules_key) if rules_key else None
+    entry, axes = _batch_axes(mesh, batch_logical, rules)
+    n_shards = 1
+    for a in axes:
+        n_shards *= mesh.shape[a]
+    r_max = cfg.r_max
+
+    def shard_fn(V_s, G_s, step):
+        K_local = V_s.shape[0]
+        pivots = graft_lib._maxvol(V_s, r_max, cfg.use_pallas)      # (R_max,)
+        G_sel = jnp.take(G_s, pivots, axis=1)                       # (d, R_max)
+        g_bar = jax.lax.pmean(jnp.mean(G_s, axis=1), axes)          # global ḡ
+        errors = jax.lax.pmean(
+            graft_lib._prefix_errors(G_sel, g_bar, cfg.use_pallas), axes)
+        rank, err = proj_lib.select_rank(errors, cfg.rset, cfg.eps)
+        active = (jnp.arange(r_max) < rank).astype(jnp.float32)
+        weights = active / jnp.maximum(n_shards * jnp.sum(active), 1.0)
+        g_sub = jax.lax.psum(G_sel @ weights, axes)                 # global subset ḡ
+        align = proj_lib.cosine_alignment(g_sub, g_bar)
+        shard = jnp.int32(0)
+        for a in axes:              # global shard index, first axis major
+            shard = shard * mesh.shape[a] + jax.lax.axis_index(a)
+        pivots_global = pivots + shard * K_local
+        return SelectionState(pivots=pivots_global.astype(jnp.int32),
+                              weights=weights, rank=rank, last_error=err,
+                              alignment=align, step=jnp.int32(step))
+
+    # check_rep=False: the scan/fori_loop bodies inside MaxVol and the MGS
+    # sweep defeat shard_map's conservative replication inference even though
+    # every P() output is pmean/psum-replicated by construction.
+    fn = shard_map(shard_fn, mesh=mesh,
+                   in_specs=(P(entry, None), P(None, entry), P()),
+                   out_specs=SelectionState(P(entry), P(entry), P(),
+                                            P(), P(), P()),
+                   check_rep=False)
+    return jax.jit(fn)
+
+
+def select_sharded(cfg: GraftConfig, mesh: Mesh, V: jax.Array, G: jax.Array,
+                   *, step=0, batch_logical: str = "act_batch",
+                   rules=None) -> SelectionState:
+    """One-shot convenience over :func:`make_sharded_selector`."""
+    _, axes = _batch_axes(mesh, batch_logical, rules)
+    n_shards = 1
+    for a in axes:
+        n_shards *= mesh.shape[a]
+    K = V.shape[0]
+    if K % n_shards:
+        raise ValueError(f"batch {K} not divisible by {n_shards} shards")
+    if K // n_shards < cfg.r_max:
+        raise ValueError(f"per-shard batch {K // n_shards} < r_max {cfg.r_max}")
+    return make_sharded_selector(cfg, mesh, batch_logical=batch_logical,
+                                 rules=rules)(V, G, jnp.int32(step))

@@ -1,0 +1,103 @@
+"""Default sampler implementations behind the registry.
+
+``graft`` is the paper's method (dynamic rank R* ≤ R_max); everything else
+selects a fixed R_max-sample subset so fraction sweeps are apples-to-apples:
+
+  * ``random``      — uniform R-of-K (needs ``inputs.key``)
+  * ``loss_topk``   — highest per-sample score/loss (needs ``inputs.scores``)
+  * ``full``        — first R_max samples (with R_max = K: no selection)
+  * ``el2n``        — largest gradient-embedding norm
+  * ``gradmatch``   — OMP matching of the mean gradient (weights re-normalized
+                      to sum 1 for training use; raw OMP fit in baselines.py)
+  * ``craig``       — facility-location greedy, cluster-share weights
+  * ``glister``     — one-step validation-gain greedy (ḡ as the val gradient)
+
+All return a :class:`SelectionState` with diagnostics filled by
+``finalize_state`` so telemetry (rank / proj_error / alignment) is comparable
+across strategies.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+import repro.core.baselines as baselines_lib
+from repro.selection.base import (GraftConfig, Sampler, SelectionInputs,
+                                  SelectionState, finalize_state)
+from repro.selection.graft import graft_sampler_fn
+from repro.selection.registry import register
+
+
+def _key_for(inputs: SelectionInputs, step: jax.Array) -> jax.Array:
+    if inputs.key is not None:
+        return inputs.key
+    return jax.random.fold_in(jax.random.PRNGKey(0), step)
+
+
+def _uniform_weights(r_max: int) -> jax.Array:
+    return jnp.full((r_max,), 1.0 / r_max, dtype=jnp.float32)
+
+
+def random_fn(cfg: GraftConfig, inputs: SelectionInputs,
+              step: jax.Array) -> SelectionState:
+    K = inputs.V.shape[0]
+    pivots, weights = baselines_lib.random_subset(_key_for(inputs, step),
+                                                  K, cfg.r_max)
+    return finalize_state(cfg, pivots, weights, cfg.r_max,
+                          inputs.G, inputs.g_bar, step)
+
+
+def loss_topk_fn(cfg: GraftConfig, inputs: SelectionInputs,
+                 step: jax.Array) -> SelectionState:
+    pivots = jnp.argsort(-inputs.scores)[:cfg.r_max].astype(jnp.int32)
+    return finalize_state(cfg, pivots, _uniform_weights(cfg.r_max),
+                          cfg.r_max, inputs.G, inputs.g_bar, step)
+
+
+def full_fn(cfg: GraftConfig, inputs: SelectionInputs,
+            step: jax.Array) -> SelectionState:
+    pivots = jnp.arange(cfg.r_max, dtype=jnp.int32)
+    return finalize_state(cfg, pivots, _uniform_weights(cfg.r_max),
+                          cfg.r_max, inputs.G, inputs.g_bar, step)
+
+
+def el2n_fn(cfg: GraftConfig, inputs: SelectionInputs,
+            step: jax.Array) -> SelectionState:
+    pivots, weights = baselines_lib.el2n_topk(inputs.G, cfg.r_max)
+    return finalize_state(cfg, pivots, weights, cfg.r_max,
+                          inputs.G, inputs.g_bar, step)
+
+
+def gradmatch_fn(cfg: GraftConfig, inputs: SelectionInputs,
+                 step: jax.Array) -> SelectionState:
+    pivots, w = baselines_lib.gradmatch_omp(inputs.G, inputs.g_bar, cfg.r_max)
+    total = jnp.sum(w)
+    weights = jnp.where(total > 1e-12, w / jnp.maximum(total, 1e-12),
+                        _uniform_weights(cfg.r_max))
+    return finalize_state(cfg, pivots, weights, cfg.r_max,
+                          inputs.G, inputs.g_bar, step)
+
+
+def craig_fn(cfg: GraftConfig, inputs: SelectionInputs,
+             step: jax.Array) -> SelectionState:
+    pivots, weights = baselines_lib.craig_greedy(inputs.G, cfg.r_max)
+    return finalize_state(cfg, pivots, weights, cfg.r_max,
+                          inputs.G, inputs.g_bar, step)
+
+
+def glister_fn(cfg: GraftConfig, inputs: SelectionInputs,
+               step: jax.Array) -> SelectionState:
+    pivots, weights = baselines_lib.glister_greedy(inputs.G, inputs.g_bar,
+                                                   cfg.r_max)
+    return finalize_state(cfg, pivots, weights, cfg.r_max,
+                          inputs.G, inputs.g_bar, step)
+
+
+GRAFT = register(Sampler("graft", graft_sampler_fn))
+RANDOM = register(Sampler("random", random_fn, needs_key=True))
+LOSS_TOPK = register(Sampler("loss_topk", loss_topk_fn, needs_scores=True))
+FULL = register(Sampler("full", full_fn))
+EL2N = register(Sampler("el2n", el2n_fn))
+GRADMATCH = register(Sampler("gradmatch", gradmatch_fn))
+CRAIG = register(Sampler("craig", craig_fn))
+GLISTER = register(Sampler("glister", glister_fn))

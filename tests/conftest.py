@@ -4,9 +4,25 @@ import sys
 # tests see the real (single) CPU device — the 512-device override belongs
 # ONLY to repro.launch.dryrun (see that module's header).
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))   # hypothesis_compat import
 
 import numpy as np
 import pytest
+
+
+def pytest_addoption(parser):
+    parser.addoption("--run-slow", action="store_true", default=False,
+                     help="run tests marked @pytest.mark.slow "
+                          "(multi-device subprocess smokes; minutes each)")
+
+
+def pytest_collection_modifyitems(config, items):
+    if config.getoption("--run-slow"):
+        return
+    deselected = [i for i in items if "slow" in i.keywords]
+    if deselected:
+        config.hook.pytest_deselected(items=deselected)
+        items[:] = [i for i in items if "slow" not in i.keywords]
 
 
 @pytest.fixture

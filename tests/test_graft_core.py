@@ -4,7 +4,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st  # skips, not collection errors, without hypothesis
 
 from repro.core import baselines, features, graft, grad_features, projection
 

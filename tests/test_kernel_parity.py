@@ -1,0 +1,117 @@
+"""Pallas kernel parity on the awkward inputs: non-square and rank-deficient
+feature/gradient matrices (interpret mode vs kernels/ref.py), plus the
+``select_rank`` eps-fallback contract."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import projection
+from repro.kernels import ref
+from repro.kernels.fast_maxvol import fast_maxvol_pallas
+from repro.kernels.projection_sweep import projection_sweep_pallas
+
+
+def _low_rank(rng, K, R, true_rank, noise=0.0):
+    A = rng.normal(size=(K, true_rank)).astype(np.float32)
+    B = rng.normal(size=(true_rank, R)).astype(np.float32)
+    X = A @ B
+    if noise:
+        X = X + noise * rng.normal(size=(K, R)).astype(np.float32)
+    return jnp.asarray(X.astype(np.float32))
+
+
+class TestFastMaxvolParity:
+    @pytest.mark.parametrize("K,R,rank", [
+        (96, 12, 12),     # tall non-square
+        (20, 16, 10),     # nearly square, partial rank
+        (17, 5, 3),       # odd shapes off the 8x128 lane grid
+    ])
+    def test_non_square(self, rng, K, R, rank):
+        V = jnp.asarray(rng.normal(size=(K, R)).astype(np.float32))
+        piv_k, lv_k = fast_maxvol_pallas(V, rank, interpret=True)
+        piv_r, lv_r = ref.fast_maxvol_ref(V, rank)
+        np.testing.assert_array_equal(np.asarray(piv_k), np.asarray(piv_r))
+        np.testing.assert_allclose(float(lv_k), float(lv_r), rtol=1e-5)
+
+    @pytest.mark.parametrize("true_rank,rank", [(3, 6), (2, 8), (4, 4)])
+    def test_rank_deficient(self, rng, true_rank, rank):
+        """Requested rank exceeds matrix rank: the eliminated residual columns
+        go ~0 and the eps pivot guard kicks in. Kernel and reference must
+        agree on the pivots (same guard, same tie-break) without NaNs."""
+        V = _low_rank(rng, 64, 8, true_rank)
+        piv_k, lv_k = fast_maxvol_pallas(V, rank, interpret=True)
+        piv_r, lv_r = ref.fast_maxvol_ref(V, rank)
+        np.testing.assert_array_equal(np.asarray(piv_k), np.asarray(piv_r))
+        assert np.isfinite(float(lv_k)) and np.isfinite(float(lv_r))
+        piv = np.asarray(piv_k)
+        assert len(set(piv.tolist())) == rank, "pivots must stay distinct"
+
+    def test_duplicated_rows(self, rng):
+        base = rng.normal(size=(8, 6)).astype(np.float32)
+        V = jnp.asarray(np.concatenate([base, base, base], axis=0))
+        piv_k, _ = fast_maxvol_pallas(V, 6, interpret=True)
+        piv_r, _ = ref.fast_maxvol_ref(V, 6)
+        np.testing.assert_array_equal(np.asarray(piv_k), np.asarray(piv_r))
+
+
+class TestProjectionSweepParity:
+    @pytest.mark.parametrize("d,R", [
+        (8, 16),      # wide: more candidates than gradient dims
+        (100, 7),     # tall odd
+        (16, 16),     # square
+    ])
+    def test_non_square(self, rng, d, R):
+        G = jnp.asarray(rng.normal(size=(d, R)).astype(np.float32))
+        g = jnp.asarray(rng.normal(size=(d,)).astype(np.float32))
+        e_k = projection_sweep_pallas(G, g, interpret=True)
+        e_r = ref.projection_sweep_ref(G, g)
+        np.testing.assert_allclose(np.asarray(e_k), np.asarray(e_r), atol=1e-5)
+
+    def test_rank_deficient_columns(self, rng):
+        """Duplicated gradient columns hit the zero-norm MGS branch; both
+        paths must emit the same (finite, monotone) error sweep."""
+        col = rng.normal(size=(32, 1)).astype(np.float32)
+        rest = rng.normal(size=(32, 4)).astype(np.float32)
+        G = jnp.asarray(np.concatenate([col, col, rest, col], axis=1))
+        g = jnp.asarray(rng.normal(size=(32,)).astype(np.float32))
+        e_k = np.asarray(projection_sweep_pallas(G, g, interpret=True))
+        e_r = np.asarray(ref.projection_sweep_ref(G, g))
+        np.testing.assert_allclose(e_k, e_r, atol=1e-5)
+        assert np.all(np.isfinite(e_k))
+        assert np.all(np.diff(e_k) <= 1e-5)
+
+    def test_wide_sweep_past_full_rank_is_flat(self, rng):
+        """Once the basis spans R^d (at r = d) the remaining prefix errors
+        must be ~0, not garbage from degenerate orthogonalization."""
+        d, R = 6, 12
+        G = jnp.asarray(rng.normal(size=(d, R)).astype(np.float32))
+        g = jnp.asarray(rng.normal(size=(d,)).astype(np.float32))
+        e = np.asarray(projection_sweep_pallas(G, g, interpret=True))
+        assert np.all(e[d:] < 1e-4)
+
+
+class TestSelectRankFallback:
+    def test_no_candidate_meets_eps_falls_back_to_r_max(self):
+        errs = jnp.asarray([0.9, 0.8, 0.7, 0.6])
+        rank, err = projection.select_rank(errs, (1, 2, 4), eps=0.1)
+        assert int(rank) == 4
+        np.testing.assert_allclose(float(err), 0.6, atol=1e-6)
+
+    def test_flat_error_plateau_does_not_collapse_rank(self):
+        """Regression: with tied errors an argmin fallback picks the SMALLEST
+        candidate — the fallback must be r_max, never a silent shrink."""
+        errs = jnp.full((8,), 0.5)
+        rank, err = projection.select_rank(errs, (1, 2, 8), eps=0.1)
+        assert int(rank) == 8
+        np.testing.assert_allclose(float(err), 0.5, atol=1e-6)
+
+    def test_smallest_satisfying_rank_still_wins(self):
+        errs = jnp.asarray([0.9, 0.5, 0.2, 0.05])
+        rank, err = projection.select_rank(errs, (1, 2, 3, 4), eps=0.3)
+        assert int(rank) == 3
+        np.testing.assert_allclose(float(err), 0.2, atol=1e-6)
+
+    def test_all_satisfying_picks_first(self):
+        errs = jnp.asarray([0.01, 0.005, 0.001, 0.0])
+        rank, _ = projection.select_rank(errs, (1, 2, 4), eps=0.25)
+        assert int(rank) == 1

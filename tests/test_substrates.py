@@ -6,7 +6,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st  # skips, not collection errors, without hypothesis
 
 from repro.checkpoint import CheckpointManager
 from repro.data import DataConfig, SyntheticClassification, SyntheticLM

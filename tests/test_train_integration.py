@@ -135,8 +135,9 @@ class TestTrainStepUnits:
         params = M.init_params(mcfg, jax.random.PRNGKey(0))
         toks = jnp.asarray(rng.integers(0, mcfg.vocab_size, (8, 32)),
                            dtype=jnp.int32)
-        V, G, gbar = steps_lib.selection_inputs(
+        V, G, gbar, scores = steps_lib.selection_inputs(
             mcfg, tcfg, params, {"tokens": toks, "labels": toks})
         assert V.shape == (8, tcfg.graft.r_max)
         assert G.shape == (mcfg.d_model, 8)
         assert gbar.shape == (mcfg.d_model,)
+        assert scores.shape == (8,) and bool(jnp.all(scores > 0))
