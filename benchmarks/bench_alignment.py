@@ -8,14 +8,15 @@ from typing import List
 import numpy as np
 
 from benchmarks.common import csv_row
-from repro.launch.train import RunConfig, train
+from repro.api import ExperimentConfig, GraftConfig, TrainConfig, Trainer
 
 
 def run() -> List[str]:
-    run_cfg = RunConfig(arch="minicpm-2b", steps=60, batch=16, seq=32,
-                        use_graft=True, graft_rset=(2, 4, 8), graft_eps=0.35,
-                        graft_refresh=4, lr=3e-3, log_every=1000)
-    report = train(run_cfg)
+    cfg = ExperimentConfig(
+        train=TrainConfig(steps=60, batch=16, seq=32, log_every=0),
+        graft=GraftConfig(rset=(2, 4, 8), eps=0.35, refresh_every=4),
+    ).apply_overrides(["optimizer.learning_rate=3e-3"])
+    report = Trainer(cfg).fit()
     hist = report["history"]
     aligns = np.asarray([h["alignment"] for h in hist])
     ranks = np.asarray([h["rank"] for h in hist])

@@ -17,13 +17,17 @@ import numpy as np
 
 from benchmarks.common import (accuracy, init_mlp, mlp_loss, sgd_step,
                                train_flops_per_example)
-from repro.core.features import svd_features
 from repro.core.grad_features import per_sample_grads_full
 from repro.core.maxvol import fast_maxvol
 from repro.data import SyntheticClassification
+from repro.selection import resolve_features
 
 DIM, HIDDEN, CLASSES = 64, 64, 4          # sentiment-ish low class count
 BATCH, STEPS, LR = 100, 120, 0.2          # paper: batch 100
+
+# the same feature-extractor registry the LM train step resolves from
+# (swap for "pca_sketch" / "pooled_raw" to reproduce the ablations)
+FEATURES = resolve_features("svd")
 
 
 def pretrain_encoder(xtr, ytr):
@@ -59,7 +63,7 @@ def finetune(method, frac, xtr, ytr, xte, yte, warm):
                 G, _ = per_sample_grads_full(ex_loss, probe, (xb, yb))
                 src = G.T if method == "graft_warm" else xb
                 rf = min(r, src.shape[1])
-                V = svd_features(src, rf)
+                V = FEATURES(src, rf)
                 piv, _ = fast_maxvol(V, rf)
                 if r > rf:
                     rest = np.setdiff1d(np.arange(BATCH), np.asarray(piv))

@@ -1,30 +1,33 @@
-"""Quickstart: GRAFT subset selection inside a tiny LM training loop.
+"""Quickstart: GRAFT subset selection through the Experiment API.
 
-Runs in ~1 minute on CPU. Shows the three-line public API:
-  1. build a model config + train config with GraftConfig
-  2. make_train_step() — selection fused into the jitted step
-  3. watch rank/alignment/loss evolve.
+Runs in ~1 minute on CPU. The whole public API is three moves:
+  1. declare an ExperimentConfig (model / train / graft / optimizer sections)
+  2. Trainer(cfg).fit() — selection fused into the jitted step, while
+     checkpointing/eval/telemetry run as Callback plugins
+  3. read the report (or add your own Callback for live metrics).
 
 Usage:  PYTHONPATH=src python examples/quickstart.py
 """
 import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.launch.train import RunConfig, train
+from repro.api import ExperimentConfig, GraftConfig, TrainConfig, Trainer
 
 
 def main():
-    run = RunConfig(
-        arch="minicpm-2b",        # smoke-sized variant of the assigned arch
-        steps=40, batch=16, seq=64,
-        use_graft=True,
-        graft_rset=(4, 8),        # candidate subset sizes (25% / 50% of batch)
-        graft_eps=0.3,            # projection-error threshold
-        graft_refresh=5,          # re-select every S=5 steps (paper: 20-50)
-        lr=3e-3, log_every=5,
-    )
-    report = train(run)
-    print(f"\nfinal loss: {report['final_loss']:.4f}  "
+    cfg = ExperimentConfig(
+        train=TrainConfig(steps=40, batch=16, seq=64, log_every=5),
+        graft=GraftConfig(
+            rset=(4, 8),          # candidate subset sizes (25% / 50% of batch)
+            eps=0.3,              # projection-error threshold
+            refresh_every=5,      # re-select every S=5 steps (paper: 20-50)
+            feature_mode="svd",   # try pca_sketch | pooled_raw
+            grad_mode="probe"),   # try logit_embed
+    ).apply_overrides(["optimizer.learning_rate=3e-3"])   # flat CLI-style
+    report = Trainer(cfg).fit()
+
+    print(f"\nconfig {report['config_hash']}  "
+          f"final loss: {report['final_loss']:.4f}  "
           f"wall: {report['wall_s']:.1f}s")
     ranks = [h["rank"] for h in report["history"]]
     print(f"selected ranks over training: min={min(ranks):.0f} "

@@ -1,5 +1,8 @@
 """End-to-end driver: train a ~100M-param LM with GRAFT vs full-batch
-baseline, with checkpoint/restart fault tolerance.
+baseline, with checkpoint/restart fault tolerance — all through the
+Experiment API. The Trainer owns resume/preemption via its
+CheckpointCallback plugin: kill the process mid-run and rerun with the same
+``--ckpt-dir`` to continue from the last manifest.
 
 The full 100M preset is sized for a real accelerator; ``--preset cpu`` (the
 default here) runs a faithful scaled-down version in a few minutes on CPU.
@@ -11,19 +14,8 @@ Usage:
 import argparse, json, os, sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import dataclasses
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.checkpoint import CheckpointManager, EmergencySaver
-from repro.selection import GraftConfig
-from repro.data import DataConfig, SyntheticLM
-from repro.distributed import sharding as sh
-from repro.launch import steps as steps_lib
-from repro.launch.mesh import make_host_mesh
-from repro.models.model import ModelConfig
-from repro.optim import OptimizerConfig
+from repro.api import (ExperimentConfig, GraftConfig, ModelConfig,
+                       OptimizerConfig, TrainConfig, Trainer)
 
 PRESETS = {
     # ~100M params: 12L d768 12H — the paper-scale LM target
@@ -37,57 +29,31 @@ PRESETS = {
 }
 
 
-def build(preset: str, use_graft: bool, steps: int, sampler: str = "graft"):
+def experiment(preset: str, use_graft: bool, steps: int, ckpt_dir,
+               sampler: str = "graft") -> ExperimentConfig:
     p = dict(PRESETS[preset])
     batch, seq = p.pop("batch"), p.pop("seq")
-    mcfg = ModelConfig(name=f"lm-{preset}", family="dense",
-                       mlp_activation="silu", remat="none", **p)
+    # minicpm's smoke config ties embeddings; these presets always carried a
+    # separate lm_head (the 100m param count includes the 768×32000 head)
+    p.update(remat="none", mlp_activation="silu", tie_embeddings=False)
     graft = GraftConfig(rset=(batch // 8, batch // 4, batch // 2), eps=0.3,
                         refresh_every=10, grad_mode="probe") if use_graft else None
-    tcfg = steps_lib.TrainConfig(
+    return ExperimentConfig(
+        model=ModelConfig(arch="minicpm-2b", smoke=True, overrides=p),
+        train=TrainConfig(steps=steps, batch=batch, seq=seq, seed=0,
+                          sampler=sampler, probe_positions=64, log_every=10,
+                          checkpoint_dir=ckpt_dir, checkpoint_every=50),
+        graft=graft,
         optimizer=OptimizerConfig(name="adamw", learning_rate=3e-4,
                                   schedule="cosine", total_steps=steps,
-                                  warmup_steps=max(steps // 20, 1)),
-        graft=graft, sampler=sampler, probe_positions=64)
-    data = SyntheticLM(DataConfig(vocab_size=mcfg.vocab_size, seq_len=seq,
-                                  global_batch=batch, seed=0))
-    return mcfg, tcfg, data, batch
+                                  warmup_steps=max(steps // 20, 1)))
 
 
-def run(preset: str, steps: int, use_graft: bool, ckpt_dir, sampler: str = "graft"):
-    mcfg, tcfg, data, batch = build(preset, use_graft, steps, sampler)
-    mesh = make_host_mesh()
-    step_fn = jax.jit(steps_lib.make_train_step(mcfg, tcfg), donate_argnums=(0,))
-    ckpt = CheckpointManager(ckpt_dir, keep_last_n=2, async_save=True) if ckpt_dir else None
-    saver = EmergencySaver()
-    with sh.sharding_rules(mesh):
-        state = steps_lib.init_train_state(mcfg, tcfg, jax.random.PRNGKey(0), batch)
-        start = 0
-        if ckpt and ckpt.latest_step() is not None:
-            s = ckpt.latest_step()
-            state = ckpt.restore(s, state)
-            start = ckpt.manifest(s)["extra"]["train_step"]
-            data.load_state_dict(ckpt.manifest(s)["extra"]["data"])
-            print(f"[resume] from step {start}")
-        data.load_state_dict({"step": start})
-        it = iter(data)
-        losses = []
-        for step in range(start, steps):
-            batch_np = next(it)
-            state, metrics = step_fn(state, {k: jnp.asarray(v) for k, v in batch_np.items()})
-            losses.append(float(metrics["loss"]))
-            if step % 10 == 0:
-                extra = f" rank={float(metrics.get('rank', 0)):.0f}" if use_graft else ""
-                print(f"step {step:4d} loss {losses[-1]:.4f}{extra}", flush=True)
-            if ckpt and ((step + 1) % 50 == 0 or saver.should_stop):
-                ckpt.save(step + 1, state, extra={"train_step": step + 1,
-                                                  "data": data.state_dict()})
-                if saver.should_stop:
-                    print("[preempted] emergency checkpoint saved")
-                    break
-        if ckpt:
-            ckpt.wait()
-    return losses
+def run(preset: str, steps: int, use_graft: bool, ckpt_dir,
+        sampler: str = "graft"):
+    cfg = experiment(preset, use_graft, steps, ckpt_dir, sampler)
+    report = Trainer(cfg).fit()
+    return [h["loss"] for h in report["history"]]
 
 
 def main():

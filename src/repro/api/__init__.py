@@ -1,0 +1,55 @@
+"""Unified Experiment API — the public entry point for training runs.
+
+One declarative ``ExperimentConfig`` (JSON round-trip, flat CLI overrides,
+stable ``config_hash``), one pluggable ``Trainer`` whose side effects are
+``Callback`` plugins, and registries for every strategy axis: samplers
+(``repro.selection.registry``), feature extractors and gradient sources
+(``repro.selection.sources``).
+
+Quickstart::
+
+    from repro.api import ExperimentConfig, TrainConfig, Trainer
+
+    cfg = ExperimentConfig(train=TrainConfig(steps=40, batch=16, seq=64))
+    report = Trainer(cfg).fit()
+    print(report["final_loss"], report["config_hash"])
+
+Resume from a checkpoint directory alone (the config rides in the
+manifest)::
+
+    report = resume("/ckpts/run1")
+
+CLI::
+
+    python -m repro.api --model.arch=minicpm-2b --train.steps=5
+    python -m repro.api --config exp.json --graft.feature_mode=pca_sketch
+    python -m repro.api --resume /ckpts/run1
+"""
+from repro.api.callbacks import (Callback, CheckpointCallback,
+                                 ConsoleCallback, EvalCallback, HookRecorder,
+                                 MetricsCallback, PreemptionCallback,
+                                 StragglerCallback, default_callbacks)
+from repro.api.config import (DataConfig, ExperimentConfig, GraftConfig,
+                              ModelConfig, OptimizerConfig, TrainConfig,
+                              apply_overrides)
+from repro.api.trainer import Trainer
+
+__all__ = [
+    "ExperimentConfig", "ModelConfig", "TrainConfig", "GraftConfig",
+    "DataConfig", "OptimizerConfig", "apply_overrides",
+    "Trainer", "run", "resume",
+    "Callback", "default_callbacks", "PreemptionCallback", "EvalCallback",
+    "MetricsCallback", "StragglerCallback", "ConsoleCallback",
+    "CheckpointCallback", "HookRecorder",
+]
+
+
+def run(config: ExperimentConfig, callbacks=None):
+    """Train ``config`` to completion; returns the report dict."""
+    return Trainer(config, callbacks=callbacks).fit()
+
+
+def resume(directory: str, callbacks=None):
+    """Resume the experiment whose config is embedded in ``directory``'s
+    latest checkpoint manifest; returns the report dict."""
+    return Trainer.from_checkpoint(directory, callbacks=callbacks).fit()

@@ -1,0 +1,263 @@
+"""Lifecycle callbacks — everything the training loop does besides stepping.
+
+The ``Trainer`` loop is pure step-dispatch; checkpointing, held-out eval,
+JSONL telemetry, straggler monitoring, console logging, and
+preemption/early-stop are all ``Callback`` plugins dispatched at four hooks:
+
+  * ``on_train_start(trainer)``             — after state init, BEFORE the
+    data iterator is created (so a restore can rewind the pipeline)
+  * ``on_step_end(trainer, step, metrics)`` — once per step, in ascending
+    ``priority`` order; callbacks may mutate ``metrics`` in place (eval
+    merges its numbers here) and call ``trainer.request_stop(reason)``
+  * ``on_checkpoint(trainer, step, path)``  — after a checkpoint commits
+  * ``on_train_end(trainer, report)``       — once, may enrich the report
+
+Ordering contract (the ``priority`` numbers below): preemption decides stop
+BEFORE eval/telemetry run, eval merges metrics BEFORE the JSONL logger
+writes them, and the checkpointer runs LAST so a stop request is always
+checkpointed before the loop exits (checkpoint-before-stop).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional
+
+import jax
+
+from repro.checkpoint import CheckpointManager, EmergencySaver
+from repro.distributed.straggler import StragglerMonitor
+from repro.launch.evaluate import make_eval_fn_for
+from repro.launch.metrics import (MetricsLogger, format_step_line,
+                                  train_step_flops)
+
+
+class Callback:
+    """Base lifecycle plugin. Lower ``priority`` runs earlier in every hook.
+
+    The default (50) sits between the stock telemetry plugins (10-40) and
+    the checkpointer (90), so a user callback that calls
+    ``trainer.request_stop()`` still gets its stop checkpointed in the same
+    step — keep custom priorities below 90 to preserve that guarantee."""
+    priority: int = 50
+
+    def on_train_start(self, trainer) -> None:
+        pass
+
+    def on_step_end(self, trainer, step: int, metrics: Dict[str, Any]) -> None:
+        pass
+
+    def on_checkpoint(self, trainer, step: int, path: str) -> None:
+        pass
+
+    def on_train_end(self, trainer, report: Dict[str, Any]) -> None:
+        pass
+
+
+class PreemptionCallback(Callback):
+    """SIGTERM/SIGINT emergency stop + ``stop_after`` simulated preemption.
+    Runs first so the checkpointer (last) sees the stop request in the same
+    step — the checkpoint-before-stop ordering guarantee."""
+    priority = 10
+
+    def __init__(self, stop_after: Optional[int] = None):
+        self.stop_after = stop_after
+        self.saver: Optional[EmergencySaver] = None
+
+    def on_train_start(self, trainer) -> None:
+        self.saver = EmergencySaver()
+
+    def on_step_end(self, trainer, step, metrics) -> None:
+        if self.saver is not None and self.saver.should_stop:
+            trainer.request_stop("preempted")
+        elif self.stop_after is not None and step + 1 >= self.stop_after:
+            trainer.request_stop("stop_after")
+
+    def on_train_end(self, trainer, report) -> None:
+        if self.saver is not None:
+            self.saver.restore_handlers()
+
+
+class EvalCallback(Callback):
+    """Held-out eval every N steps; merges ``eval_loss``/``eval_ppl`` into
+    the step metrics BEFORE the telemetry logger writes them."""
+    priority = 20
+
+    def __init__(self, every: int, num_batches: int = 4):
+        self.every = every
+        self.num_batches = num_batches
+        self.eval_fn = None
+
+    def on_train_start(self, trainer) -> None:
+        self.eval_fn = make_eval_fn_for(trainer.config, trainer.mcfg,
+                                        num_batches=self.num_batches)
+
+    def on_step_end(self, trainer, step, metrics) -> None:
+        if self.every and (step + 1) % self.every == 0:
+            metrics.update(self.eval_fn(trainer.state["params"]))
+
+
+class MetricsCallback(Callback):
+    """JSONL telemetry stream + throughput/MFU tracking. Runs after eval so
+    held-out numbers reach the stream (one row per step)."""
+    priority = 30
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path
+        self.logger: Optional[MetricsLogger] = None
+
+    def on_train_start(self, trainer) -> None:
+        tr = trainer.config.train
+        self.logger = MetricsLogger(
+            self.path, num_chips=len(jax.devices()),
+            flops_per_step=train_step_flops(
+                trainer.num_params, tr.batch * tr.seq,
+                remat=trainer.mcfg.remat != "none"))
+
+    def on_step_end(self, trainer, step, metrics) -> None:
+        tr = trainer.config.train
+        self.logger.log(step, metrics, tokens=tr.batch * tr.seq)
+
+    def on_train_end(self, trainer, report) -> None:
+        if self.logger is not None:
+            self.logger.close()
+
+
+class StragglerCallback(Callback):
+    """Per-step wall-time distribution; summary lands in the report."""
+    priority = 40
+
+    def __init__(self):
+        self.monitor = StragglerMonitor()
+
+    def on_step_end(self, trainer, step, metrics) -> None:
+        self.monitor.record(trainer.last_step_time)
+
+    def on_train_end(self, trainer, report) -> None:
+        report["straggler"] = self.monitor.summary()
+
+
+class LegacyFunctionCallback(Callback):
+    """Adapter for the pre-API ``train(run, callbacks=[fn])`` hook:
+    ``fn(step, state, metrics)`` once per step."""
+    priority = 55
+
+    def __init__(self, fn: Callable[[int, Any, Dict[str, Any]], None]):
+        self.fn = fn
+
+    def on_step_end(self, trainer, step, metrics) -> None:
+        self.fn(step, trainer.state, metrics)
+
+
+class ConsoleCallback(Callback):
+    """Progress lines every ``log_every`` steps (post-eval metrics)."""
+    priority = 60
+
+    def __init__(self, every: int = 10):
+        self.every = every
+
+    def on_step_end(self, trainer, step, metrics) -> None:
+        if self.every and step % self.every == 0:
+            print(format_step_line(step, metrics, trainer.last_step_time,
+                                   use_graft=trainer.tcfg.use_graft),
+                  flush=True)
+
+
+class CheckpointCallback(Callback):
+    """Fault-tolerant checkpointing: auto-restore on start, periodic +
+    final + stop-triggered saves, manifest embedding of the finalized
+    ``ExperimentConfig`` so a resume needs nothing but the directory.
+
+    Runs LAST in ``on_step_end`` so any stop requested earlier in the same
+    step (preemption, ``stop_after``) is checkpointed before the loop exits.
+    """
+    priority = 90
+
+    def __init__(self, directory: str, every: int = 50, keep_last_n: int = 2,
+                 async_save: bool = True, restore: bool = True):
+        self.directory = directory
+        self.every = every
+        self.restore = restore
+        self.manager = CheckpointManager(directory, keep_last_n=keep_last_n,
+                                         async_save=async_save)
+
+    def on_train_start(self, trainer) -> None:
+        trainer.checkpoint_manager = self.manager
+        step = self.manager.latest_step()
+        if not self.restore or step is None:
+            return
+        manifest = self.manager.manifest(step)
+        trainer.state = self.manager.restore(step, trainer.state)
+        # restore the full pipeline state from the manifest ONCE — the
+        # trainer creates its iterator only after on_train_start, so
+        # nothing can clobber this
+        trainer.data.load_state_dict(manifest["extra"]["data"])
+        trainer.start_step = int(manifest["extra"]["train_step"])
+        saved_hash = manifest["extra"].get("config_hash")
+        ours = trainer.config.config_hash()
+        if saved_hash is not None and saved_hash != ours:
+            print(f"[train] WARNING: resuming config {ours} from a "
+                  f"checkpoint written by config {saved_hash}")
+        print(f"[train] resumed from step {trainer.start_step}")
+
+    def on_step_end(self, trainer, step, metrics) -> None:
+        total = trainer.config.train.steps
+        due = (step + 1) % self.every == 0
+        if not (due or trainer.should_stop or step + 1 == total):
+            return
+        path = self.manager.save(
+            step + 1, trainer.state,
+            extra={"train_step": step + 1,
+                   "data": trainer.data.state_dict(),
+                   "metrics": metrics,
+                   "experiment": trainer.config.to_dict(),
+                   "config_hash": trainer.config.config_hash()})
+        listeners = [cb for cb in trainer.callbacks
+                     if type(cb).on_checkpoint is not Callback.on_checkpoint]
+        if listeners:
+            # the hook contract is "after the checkpoint commits": an async
+            # save returns before the tmp→final rename, so join the writer
+            # before announcing. No listeners → keep the save fully async.
+            self.manager.wait()
+            for cb in listeners:
+                cb.on_checkpoint(trainer, step, path)
+        if trainer.should_stop:
+            print("[train] emergency checkpoint written — exiting")
+
+    def on_train_end(self, trainer, report) -> None:
+        self.manager.wait()
+
+
+class HookRecorder(Callback):
+    """Test/debug helper: records (hook, step) tuples in call order."""
+    priority = 95
+
+    def __init__(self):
+        self.events = []
+
+    def on_train_start(self, trainer) -> None:
+        self.events.append(("on_train_start", None))
+
+    def on_step_end(self, trainer, step, metrics) -> None:
+        self.events.append(("on_step_end", step))
+
+    def on_checkpoint(self, trainer, step, path) -> None:
+        self.events.append(("on_checkpoint", step))
+
+    def on_train_end(self, trainer, report) -> None:
+        self.events.append(("on_train_end", None))
+
+
+def default_callbacks(cfg) -> list:
+    """The stock plugin set for an ``ExperimentConfig`` (mirrors what the
+    legacy monolithic loop hardwired)."""
+    tr = cfg.train
+    cbs: list = [PreemptionCallback(tr.stop_after)]
+    if tr.eval_every:
+        cbs.append(EvalCallback(tr.eval_every))
+    cbs.append(MetricsCallback(tr.metrics_path))
+    cbs.append(StragglerCallback())
+    if tr.log_every:
+        cbs.append(ConsoleCallback(tr.log_every))
+    if tr.checkpoint_dir:
+        cbs.append(CheckpointCallback(tr.checkpoint_dir,
+                                      every=tr.checkpoint_every))
+    return cbs

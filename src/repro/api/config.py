@@ -1,0 +1,347 @@
+"""Declarative experiment configuration — the single source of truth for a
+training run.
+
+``ExperimentConfig`` owns five subsections:
+
+  * ``model``     — which architecture (registry id), smoke vs full, field
+                    overrides (``repro.api.ModelConfig``)
+  * ``train``     — loop-level knobs: steps, batch, seq, sampler, telemetry
+                    and checkpoint cadence (``repro.api.TrainConfig``)
+  * ``graft``     — the paper's selection hyper-parameters, or ``None`` for
+                    the full-batch baseline (``repro.selection.GraftConfig``)
+  * ``data``      — synthetic-pipeline parameters; ``None`` derives them
+                    from model + train (``repro.data.DataConfig``)
+  * ``optimizer`` — ``repro.optim.OptimizerConfig``; ``total_steps``/
+                    ``warmup_steps`` of 0 mean "derive from train.steps"
+
+Round-trips losslessly through JSON (``to_json``/``from_json``), accepts
+flat dotted CLI overrides (``apply_overrides(["train.steps=5",
+"graft.eps=0.3"])``), and hashes canonically (``config_hash()`` covers only
+the fields that affect the training trajectory, so an interrupted run and
+its uninterrupted twin agree). The finalized config is embedded in every
+checkpoint manifest, which is what lets ``Trainer.from_checkpoint`` rebuild
+the exact experiment from the directory alone.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from typing import Any, Dict, Iterable, Optional, Tuple
+
+from repro.data import DataConfig
+from repro.optim import OptimizerConfig
+from repro.selection.base import GraftConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Declarative model selection: an architecture-registry id plus
+    optional field overrides, resolved through ``repro.configs``."""
+    arch: str = "minicpm-2b"
+    smoke: bool = True                  # smoke (CPU-sized) vs published config
+    overrides: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def build(self):
+        from repro import configs as config_lib
+        ov = dict(self.overrides)
+        return (config_lib.get_smoke_config(self.arch, **ov) if self.smoke
+                else config_lib.get_config(self.arch, **ov))
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    """Loop-level training knobs (the trajectory-shaping ones are hashed;
+    paths/cadences/stop_after are run-environment and are not)."""
+    steps: int = 100
+    batch: int = 16
+    seq: int = 64
+    seed: int = 0
+    sampler: str = "graft"              # any repro.selection registry name
+    probe_positions: int = 0            # 0 = derive min(64, seq)
+    microbatches: int = 1
+    # --- run environment (excluded from config_hash) ---
+    log_every: int = 10
+    eval_every: int = 0                 # 0 = no held-out evaluation
+    checkpoint_dir: Optional[str] = None
+    checkpoint_every: int = 50
+    metrics_path: Optional[str] = None  # JSONL telemetry stream
+    stop_after: Optional[int] = None    # simulate preemption after N steps
+
+
+# train fields that do not affect the optimization trajectory: two runs that
+# differ only here are the same experiment (same config_hash)
+_NONSEMANTIC_TRAIN_FIELDS = ("log_every", "eval_every", "checkpoint_dir",
+                             "checkpoint_every", "metrics_path", "stop_after")
+
+_SECTION_TYPES = {
+    "model": ModelConfig,
+    "train": TrainConfig,
+    "graft": GraftConfig,
+    "data": DataConfig,
+    "optimizer": OptimizerConfig,
+}
+_OPTIONAL_SECTIONS = ("graft", "data")
+
+
+@dataclasses.dataclass(frozen=True)
+class ExperimentConfig:
+    model: ModelConfig = ModelConfig()
+    train: TrainConfig = TrainConfig()
+    graft: Optional[GraftConfig] = GraftConfig(
+        rset=(2, 4, 8), eps=0.25, refresh_every=5, grad_mode="probe")
+    data: Optional[DataConfig] = None
+    optimizer: OptimizerConfig = OptimizerConfig(
+        name="adamw", learning_rate=3e-4, schedule="cosine",
+        total_steps=0, warmup_steps=0)
+
+    # ------------------------------------------------------------------
+    # derivation
+    # ------------------------------------------------------------------
+    def finalized(self) -> "ExperimentConfig":
+        """Materialize every derived field so the config is self-contained
+        (this is the form embedded in checkpoint manifests). Idempotent."""
+        train = self.train
+        if train.probe_positions <= 0:
+            train = dataclasses.replace(
+                train, probe_positions=min(64, train.seq))
+        opt = self.optimizer
+        if opt.total_steps <= 0:
+            opt = dataclasses.replace(opt, total_steps=train.steps)
+        if opt.warmup_steps <= 0:
+            opt = dataclasses.replace(
+                opt, warmup_steps=max(train.steps // 20, 1))
+        data = self.data
+        if data is None:
+            mcfg = self.model.build()
+            data = DataConfig(vocab_size=mcfg.vocab_size, seq_len=train.seq,
+                              global_batch=train.batch, seed=train.seed)
+        return dataclasses.replace(self, train=train, optimizer=opt, data=data)
+
+    # ------------------------------------------------------------------
+    # builders (the Trainer's inputs)
+    # ------------------------------------------------------------------
+    def build(self):
+        """→ (model config, step-level TrainConfig, data pipeline).
+
+        Validates that an explicit ``data`` section agrees with model/train
+        — a mismatched vocab silently NaNs the loss (out-of-range token ids
+        clamp in gather), and a mismatched batch/seq fails with an opaque
+        jit shape error; both deserve a loud message instead."""
+        from repro.data import SyntheticLM
+        from repro.launch import steps as steps_lib
+        cfg = self.finalized()
+        mcfg = cfg.model.build()
+        tr, d = cfg.train, cfg.data
+        mismatches = [
+            f"data.{k}={got} != {want} ({src})"
+            for k, got, want, src in [
+                ("global_batch", d.global_batch, tr.batch, "train.batch"),
+                ("seq_len", d.seq_len, tr.seq, "train.seq"),
+                ("vocab_size", d.vocab_size, mcfg.vocab_size, "model vocab"),
+            ] if got != want]
+        if mismatches:
+            raise ValueError(
+                "data section disagrees with model/train: "
+                + "; ".join(mismatches)
+                + " — fix the fields or set data=none to re-derive")
+        tcfg = steps_lib.TrainConfig(
+            optimizer=cfg.optimizer, graft=cfg.graft,
+            sampler=tr.sampler,
+            probe_positions=tr.probe_positions,
+            microbatches=tr.microbatches)
+        data = SyntheticLM(d)
+        return mcfg, tcfg, data
+
+    # ------------------------------------------------------------------
+    # serialization
+    # ------------------------------------------------------------------
+    def to_dict(self) -> Dict[str, Any]:
+        out: Dict[str, Any] = {}
+        for name in _SECTION_TYPES:
+            section = getattr(self, name)
+            out[name] = None if section is None else _section_to_dict(section)
+        return out
+
+    def to_json(self, indent: Optional[int] = None) -> str:
+        return json.dumps(self.to_dict(), indent=indent, sort_keys=True)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "ExperimentConfig":
+        kwargs: Dict[str, Any] = {}
+        for name, typ in _SECTION_TYPES.items():
+            raw = d.get(name)
+            if raw is None:
+                if name in _OPTIONAL_SECTIONS:
+                    kwargs[name] = None
+                    continue
+                raise KeyError(f"experiment dict missing section '{name}'")
+            kwargs[name] = _section_from_dict(typ, raw)
+        return cls(**kwargs)
+
+    @classmethod
+    def from_json(cls, s: str) -> "ExperimentConfig":
+        return cls.from_dict(json.loads(s))
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            f.write(self.to_json(indent=1) + "\n")
+
+    @classmethod
+    def load(cls, path: str) -> "ExperimentConfig":
+        with open(path) as f:
+            return cls.from_json(f.read())
+
+    # ------------------------------------------------------------------
+    # identity
+    # ------------------------------------------------------------------
+    def config_hash(self) -> str:
+        """Stable 12-hex digest over the trajectory-shaping fields of the
+        finalized config. Run-environment fields (paths, cadences,
+        ``stop_after``) are excluded, so a preempted run, its resume, and an
+        uninterrupted twin all share one hash."""
+        d = self.finalized().to_dict()
+        for f in _NONSEMANTIC_TRAIN_FIELDS:
+            d["train"].pop(f, None)
+        blob = json.dumps(d, sort_keys=True).encode()
+        return hashlib.sha256(blob).hexdigest()[:12]
+
+    # ------------------------------------------------------------------
+    # flat CLI overrides
+    # ------------------------------------------------------------------
+    def apply_overrides(self, pairs: Iterable[str]) -> "ExperimentConfig":
+        """Apply flat ``section.field=value`` overrides (values parsed as
+        JSON, falling back to string). ``graft=none`` / ``data=none`` clear
+        an optional section; a ``graft.*`` override on a disabled section
+        re-enables it from defaults first."""
+        cfg = self
+        for pair in pairs:
+            if "=" not in pair:
+                raise ValueError(f"override '{pair}' is not key=value")
+            key, raw = pair.split("=", 1)
+            cfg = _apply_one(cfg, key.strip(), raw.strip())
+        return cfg
+
+
+# ---------------------------------------------------------------------------
+# (de)serialization helpers
+# ---------------------------------------------------------------------------
+
+def _section_to_dict(section) -> Dict[str, Any]:
+    out = {}
+    for f in dataclasses.fields(section):
+        v = getattr(section, f.name)
+        out[f.name] = list(v) if isinstance(v, tuple) else v
+    return out
+
+
+def _section_from_dict(typ, raw: Dict[str, Any]):
+    defaults = typ()
+    kwargs = {}
+    names = {f.name for f in dataclasses.fields(typ)}
+    unknown = set(raw) - names
+    if unknown:
+        raise KeyError(f"unknown {typ.__name__} field(s): {sorted(unknown)}")
+    for name in raw:
+        v = raw[name]
+        if isinstance(v, list) and isinstance(getattr(defaults, name), tuple):
+            v = tuple(v)
+        kwargs[name] = v
+    return typ(**kwargs)
+
+
+def _parse_value(raw: str) -> Any:
+    low = raw.lower()
+    if low in ("none", "null"):
+        return None
+    try:
+        return json.loads(raw)
+    except (ValueError, json.JSONDecodeError):
+        return raw
+
+
+def _coerce(value: Any, current: Any) -> Any:
+    if isinstance(current, tuple) and isinstance(value, list):
+        return tuple(value)
+    if isinstance(current, tuple) and isinstance(value, str):
+        # "2,4,8" CLI shorthand for a JSON list
+        return tuple(_parse_value(v) for v in value.split(",") if v)
+    if isinstance(current, bool) and isinstance(value, int) \
+            and not isinstance(value, bool):
+        return bool(value)
+    if isinstance(current, float) and isinstance(value, int) \
+            and not isinstance(value, bool):
+        return float(value)
+    return value
+
+
+def _apply_one(cfg: ExperimentConfig, key: str, raw: str) -> ExperimentConfig:
+    value = _parse_value(raw)
+    if "." not in key:                       # whole-section assignment
+        if key not in _SECTION_TYPES:
+            raise KeyError(f"unknown config section '{key}' "
+                           f"(have {sorted(_SECTION_TYPES)})")
+        if value is None:
+            if key not in _OPTIONAL_SECTIONS:
+                raise ValueError(f"section '{key}' cannot be disabled")
+            return dataclasses.replace(cfg, **{key: None})
+        if isinstance(value, dict):
+            return dataclasses.replace(
+                cfg, **{key: _section_from_dict(_SECTION_TYPES[key], value)})
+        raise ValueError(f"override '{key}={raw}': expected none or a dict")
+
+    section_name, field = key.split(".", 1)
+    if section_name not in _SECTION_TYPES:
+        raise KeyError(f"unknown config section '{section_name}' "
+                       f"(have {sorted(_SECTION_TYPES)})")
+    typ = _SECTION_TYPES[section_name]
+    section = getattr(cfg, section_name)
+    if section is None:                      # re-enable optional section
+        if section_name == "graft":
+            section = ExperimentConfig().graft
+        else:
+            # data: derive from model/train so vocab/batch/seq agree —
+            # raw DataConfig() defaults would silently mismatch the model
+            section = cfg.finalized().data
+    names = {f.name for f in dataclasses.fields(typ)}
+    if field not in names:
+        raise KeyError(f"unknown field '{field}' in section "
+                       f"'{section_name}' (have {sorted(names)})")
+    value = _coerce(value, getattr(section, field))
+    new_section = dataclasses.replace(section, **{field: value})
+    new_cfg = dataclasses.replace(cfg, **{section_name: new_section})
+    return _refresh_derived(cfg, new_cfg, section_name, field)
+
+
+def _refresh_derived(old: ExperimentConfig, new: ExperimentConfig,
+                     section_name: str, field: str) -> ExperimentConfig:
+    """Overrides may land on a previously-``finalized()`` config (the form
+    ``--dump-config`` emits and the manifest embeds). Any field that was
+    DERIVED there — i.e. still equals the old config's derivation — is reset
+    to its sentinel so ``finalized()`` re-derives it against the new values;
+    explicitly-set fields are untouched, as is the section being overridden.
+    Without this, ``--train.steps=500`` on a dumped 5-step config would keep
+    a cosine horizon of 5 and train 495 steps at ~zero LR."""
+    if section_name != "optimizer":
+        opt, repl = new.optimizer, {}
+        if opt.total_steps in (0, old.train.steps):
+            repl["total_steps"] = 0
+        if opt.warmup_steps in (0, max(old.train.steps // 20, 1)):
+            repl["warmup_steps"] = 0
+        if repl:
+            new = dataclasses.replace(
+                new, optimizer=dataclasses.replace(opt, **repl))
+    if (section_name, field) != ("train", "probe_positions") \
+            and new.train.probe_positions in (0, min(64, old.train.seq)):
+        new = dataclasses.replace(new, train=dataclasses.replace(
+            new.train, probe_positions=0))
+    if section_name != "data" and new.data is not None \
+            and new.data == dataclasses.replace(old, data=None).finalized().data:
+        new = dataclasses.replace(new, data=None)
+    return new
+
+
+# convenience alias used by the CLI and tests
+def apply_overrides(cfg: ExperimentConfig,
+                    pairs: Iterable[str]) -> ExperimentConfig:
+    return cfg.apply_overrides(pairs)

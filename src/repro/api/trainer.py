@@ -1,0 +1,134 @@
+"""The ``Trainer``: a pure step-dispatch loop over a declarative
+``ExperimentConfig``, with every side effect (checkpointing, eval,
+telemetry, monitoring, early stop) delegated to ``Callback`` plugins.
+
+Typical use::
+
+    from repro.api import ExperimentConfig, Trainer
+
+    cfg = ExperimentConfig().apply_overrides(["train.steps=40"])
+    report = Trainer(cfg).fit()
+
+Resume needs nothing but the checkpoint directory — the finalized config
+rides in the manifest::
+
+    report = Trainer.from_checkpoint("/ckpts/run1").fit()
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, Iterable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api import callbacks as cb_lib
+from repro.api.config import ExperimentConfig
+from repro.distributed import sharding as sh
+from repro.launch import steps as steps_lib
+from repro.launch.mesh import make_host_mesh
+
+
+class Trainer:
+    """Runs one experiment. ``callbacks`` are appended to the stock set
+    derived from the config; pass ``use_default_callbacks=False`` to take
+    full control of the plugin list."""
+
+    def __init__(self, config: ExperimentConfig,
+                 callbacks: Optional[Iterable[cb_lib.Callback]] = None,
+                 use_default_callbacks: bool = True):
+        self.config = config.finalized()
+        cbs = list(cb_lib.default_callbacks(self.config)
+                   if use_default_callbacks else [])
+        if callbacks:
+            cbs.extend(callbacks)
+        self.callbacks = sorted(cbs, key=lambda c: c.priority)
+
+        # populated by fit(); callbacks read these
+        self.mcfg = None
+        self.tcfg: Optional[steps_lib.TrainConfig] = None
+        self.data = None
+        self.state = None
+        self.start_step: int = 0
+        self.num_params: int = 0
+        self.last_step_time: float = 0.0
+        self.should_stop: bool = False
+        self.stop_reason: Optional[str] = None
+        self.checkpoint_manager = None
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def from_checkpoint(cls, directory: str,
+                        callbacks: Optional[Iterable[cb_lib.Callback]] = None,
+                        use_default_callbacks: bool = True) -> "Trainer":
+        """Reconstruct the exact experiment from a checkpoint directory
+        alone: the manifest-embedded ``ExperimentConfig`` is reloaded,
+        ``stop_after`` (a one-shot simulated preemption, already consumed)
+        is cleared, and ``checkpoint_dir`` is pointed at ``directory`` so
+        the run restores and keeps checkpointing in place."""
+        from repro.checkpoint import load_experiment
+        import dataclasses
+        cfg = load_experiment(directory)
+        cfg = dataclasses.replace(cfg, train=dataclasses.replace(
+            cfg.train, stop_after=None, checkpoint_dir=directory))
+        return cls(cfg, callbacks=callbacks,
+                   use_default_callbacks=use_default_callbacks)
+
+    # ------------------------------------------------------------------
+    def request_stop(self, reason: str = "requested") -> None:
+        """Ask the loop to exit after this step's callbacks finish. The
+        checkpointer runs after stop-requesting callbacks (priority order),
+        so the stop is checkpointed before the loop breaks."""
+        self.should_stop = True
+        if self.stop_reason is None:
+            self.stop_reason = reason
+
+    def _fire(self, hook: str, *args) -> None:
+        for cb in self.callbacks:
+            getattr(cb, hook)(self, *args)
+
+    # ------------------------------------------------------------------
+    def fit(self) -> Dict[str, Any]:
+        cfg = self.config
+        tr = cfg.train
+        self.mcfg, self.tcfg, self.data = cfg.build()
+        mesh = make_host_mesh()
+        step_fn = steps_lib.make_train_step(self.mcfg, self.tcfg)
+        jitted = jax.jit(step_fn, donate_argnums=(0,))
+
+        history = []
+        with sh.sharding_rules(mesh):
+            self.state = steps_lib.init_train_state(
+                self.mcfg, self.tcfg, jax.random.PRNGKey(tr.seed), tr.batch)
+            self.num_params = sum(
+                int(np.prod(l.shape)) for l in
+                jax.tree_util.tree_leaves(self.state["params"]))
+            self.start_step = 0
+            # hooks may restore state + data-pipeline position (checkpoint
+            # resume); the iterator is created only afterwards
+            self._fire("on_train_start")
+            it = iter(self.data)
+            t_start = time.time()
+            for step in range(self.start_step, tr.steps):
+                batch_np = next(it)
+                batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
+                t0 = time.time()
+                self.state, metrics = jitted(self.state, batch)
+                metrics = {k: float(v) for k, v in metrics.items()}
+                self.last_step_time = time.time() - t0
+                self._fire("on_step_end", step, metrics)
+                history.append(metrics)
+                if self.should_stop:
+                    break
+            wall = time.time() - t_start
+            report: Dict[str, Any] = {
+                "final_loss": history[-1]["loss"] if history else None,
+                "history": history,
+                "wall_s": wall,
+                "config_hash": cfg.config_hash(),
+            }
+            if self.stop_reason is not None:
+                report["stopped"] = self.stop_reason
+            self._fire("on_train_end", report)
+        return report

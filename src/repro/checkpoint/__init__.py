@@ -1,4 +1,5 @@
 """Atomic, resumable, elastic checkpointing with async writes."""
-from repro.checkpoint.checkpoint import CheckpointManager, EmergencySaver
+from repro.checkpoint.checkpoint import (CheckpointManager, EmergencySaver,
+                                         load_experiment)
 
-__all__ = ["CheckpointManager", "EmergencySaver"]
+__all__ = ["CheckpointManager", "EmergencySaver", "load_experiment"]

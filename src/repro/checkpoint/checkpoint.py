@@ -161,6 +161,26 @@ class CheckpointManager:
         with open(path) as f:
             return json.load(f)
 
+    def latest_manifest(self) -> Optional[Dict]:
+        step = self.latest_step()
+        return None if step is None else self.manifest(step)
+
+
+def load_experiment(directory: str):
+    """Reconstruct the ``repro.api.ExperimentConfig`` embedded in the latest
+    manifest of ``directory`` — the resume path needs no re-specified flags.
+    Raises if the directory has no checkpoint or predates config embedding.
+    """
+    from repro.api.config import ExperimentConfig  # lazy: avoids api↔ckpt cycle
+    manifest = CheckpointManager(directory).latest_manifest()
+    if manifest is None:
+        raise FileNotFoundError(f"no checkpoint under '{directory}'")
+    exp = manifest.get("extra", {}).get("experiment")
+    if exp is None:
+        raise KeyError(f"checkpoint in '{directory}' has no embedded "
+                       "experiment config (written before the repro.api era?)")
+    return ExperimentConfig.from_dict(exp)
+
 
 class EmergencySaver:
     """SIGTERM/SIGINT preemption handler: request a final checkpoint.

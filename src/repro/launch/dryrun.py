@@ -147,7 +147,9 @@ def compile_cell(cell: specs_lib.Cell, mesh) -> Dict[str, Any]:
 
 def run_cell(arch: str, shape: str, mesh_kind: str, variant: str,
              with_deltas: bool = True, smoke: bool = False,
-             mesh_override=None, rules_preset: str = "default") -> Dict[str, Any]:
+             mesh_override=None, rules_preset: str = "default",
+             feature_mode: str = "svd",
+             grad_mode: str = "probe") -> Dict[str, Any]:
     cfg = config_lib.get_config(arch)
     period = max(len(cfg.layer_pattern), 1) if cfg.layer_pattern else 1
     if cfg.global_layer_indices:
@@ -162,16 +164,17 @@ def run_cell(arch: str, shape: str, mesh_kind: str, variant: str,
         mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
 
     rule_overrides = dict(specs_lib.RULE_PRESETS[rules_preset])
+    sel_modes = {"feature_mode": feature_mode, "grad_mode": grad_mode}
     out: Dict[str, Any] = {
         "arch": arch, "shape": shape, "mesh": mesh_kind,
         "mesh_shape": dict(zip(mesh.axis_names, mesh.devices.shape)),
         "variant": variant, "smoke": smoke, "rules_preset": rules_preset,
-        "num_layers": cfg.num_layers, "period": period,
+        "num_layers": cfg.num_layers, "period": period, **sel_modes,
     }
 
     # 1) full-depth scan compile — THE dry-run artifact (memory + success)
     cell = specs_lib.build_cell(arch, shape, variant=variant, smoke=smoke,
-                                rule_overrides=rule_overrides)
+                                rule_overrides=rule_overrides, **sel_modes)
     out["full"] = compile_cell(cell, mesh)
 
     # 2) unrolled L=p / L=2p compiles — roofline cost deltas (exact_cost:
@@ -181,12 +184,14 @@ def run_cell(arch: str, shape: str, mesh_kind: str, variant: str,
                                      num_layers_override=p1,
                                      scan_override=False, smoke=smoke,
                                      exact_cost=True,
-                                     rule_overrides=rule_overrides)
+                                     rule_overrides=rule_overrides,
+                                     **sel_modes)
         cell2 = specs_lib.build_cell(arch, shape, variant=variant,
                                      num_layers_override=p2,
                                      scan_override=False, smoke=smoke,
                                      exact_cost=True,
-                                     rule_overrides=rule_overrides)
+                                     rule_overrides=rule_overrides,
+                                     **sel_modes)
         c1 = compile_cell(cell1, mesh)
         c2 = compile_cell(cell2, mesh)
         out["unrolled_p1"] = c1
@@ -223,6 +228,11 @@ def main(argv=None) -> int:
                     help="skip the unrolled L1/L2 roofline compiles")
     ap.add_argument("--smoke", action="store_true",
                     help="reduced configs (CI)")
+    ap.add_argument("--feature-mode", default="svd",
+                    help="selection feature extractor for graft cells "
+                         "(repro.selection.sources registry)")
+    ap.add_argument("--grad-mode", default="probe",
+                    help="selection gradient source for graft cells")
     ap.add_argument("--skip-existing", action="store_true")
     ap.add_argument("--list", action="store_true")
     args = ap.parse_args(argv)
@@ -264,7 +274,9 @@ def main(argv=None) -> int:
             res = run_cell(arch, shape, args.mesh,
                            "graft" if v == "graft" else
                            ("baseline" if v == "baseline" else "serve"),
-                           with_deltas=not args.no_deltas, smoke=args.smoke)
+                           with_deltas=not args.no_deltas, smoke=args.smoke,
+                           feature_mode=args.feature_mode,
+                           grad_mode=args.grad_mode)
             res["ok"] = True
         except Exception:
             res = {"arch": arch, "shape": shape, "mesh": args.mesh,

@@ -38,3 +38,13 @@ def make_eval_fn(mcfg: model_lib.ModelConfig, batch: int, seq: int,
         return {"eval_loss": mean, "eval_ppl": float(jnp.exp(mean))}
 
     return evaluate
+
+
+def make_eval_fn_for(experiment, mcfg: model_lib.ModelConfig,
+                     num_batches: int = 4):
+    """Eval fn for a ``repro.api.ExperimentConfig`` — one place owns the
+    eval-batch policy (≤8 sequences, train seq/seed) so the EvalCallback and
+    ad-hoc scripts agree."""
+    tr = experiment.train
+    return make_eval_fn(mcfg, batch=min(tr.batch, 8), seq=tr.seq,
+                        seed=tr.seed, num_batches=num_batches)

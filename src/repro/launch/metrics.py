@@ -57,6 +57,15 @@ class MetricsLogger:
             self._f.close()
 
 
+def format_step_line(step: int, metrics: Dict[str, Any], dt: float,
+                     use_graft: bool = False) -> str:
+    """One console progress line (the ConsoleCallback / legacy-loop format)."""
+    extra = (f" rank={metrics.get('rank', 0):.0f}"
+             f" align={metrics.get('alignment', 0):.3f}" if use_graft else "")
+    return (f"[train] step {step:5d} loss {metrics['loss']:.4f} "
+            f"gnorm {metrics['grad_norm']:.3f} {dt*1e3:.0f}ms{extra}")
+
+
 def read_metrics(path: str):
     out = []
     if not os.path.exists(path):

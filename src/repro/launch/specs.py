@@ -74,14 +74,16 @@ def all_cells():
 
 
 def default_train_config(arch: str, use_graft: bool = True,
-                         batch: int = 256) -> steps_lib.TrainConfig:
+                         batch: int = 256, feature_mode: str = "svd",
+                         grad_mode: str = "probe") -> steps_lib.TrainConfig:
     opt_name = "adafactor" if arch in _ADAFACTOR_ARCHS else "adamw"
     schedule = "wsd" if arch == "minicpm-2b" else "cosine"
     rset = tuple(r for r in (16, 32, 64, 128) if r <= batch // 2)
     if not rset:
         rset = (max(1, batch // 4), max(2, batch // 2))
     graft = GraftConfig(rset=rset, eps=0.25, refresh_every=1,
-                        feature_mode="svd", grad_mode="probe") if use_graft else None
+                        feature_mode=feature_mode,
+                        grad_mode=grad_mode) if use_graft else None
     return steps_lib.TrainConfig(
         optimizer=OptimizerConfig(name=opt_name, schedule=schedule,
                                   total_steps=10_000, warmup_steps=200,
@@ -164,7 +166,8 @@ def build_cell(arch: str, shape: str, *, variant: str = "graft",
                num_layers_override: Optional[int] = None,
                scan_override: Optional[bool] = None,
                rule_overrides: Optional[Dict[str, Any]] = None,
-               smoke: bool = False, exact_cost: bool = False) -> Cell:
+               smoke: bool = False, exact_cost: bool = False,
+               feature_mode: str = "svd", grad_mode: str = "probe") -> Cell:
     """Construct the lowered-artifact description for one cell.
 
     variant: 'graft' | 'baseline' (train cells only).
@@ -172,6 +175,9 @@ def build_cell(arch: str, shape: str, *, variant: str = "graft",
     exact_cost: disable attn/loss chunking (their internal lax.scans are
     counted once by XLA cost analysis, silently hiding ~T/chunk of the
     FLOPs/bytes) — used ONLY for the roofline cost compiles; math identical.
+    feature_mode/grad_mode: selection-input strategies from the
+    ``repro.selection.sources`` registries (graft train cells only) — lets
+    the dry-run compare roofline costs of e.g. ``pca_sketch`` vs ``svd``.
     """
     ok, why = cell_is_supported(arch, shape)
     if not ok:
@@ -202,7 +208,9 @@ def build_cell(arch: str, shape: str, *, variant: str = "graft",
 
     if info["kind"] == "train":
         use_graft = variant in ("graft", "subset", "select")
-        tcfg = default_train_config(arch, use_graft=use_graft, batch=B)
+        tcfg = default_train_config(arch, use_graft=use_graft, batch=B,
+                                    feature_mode=feature_mode,
+                                    grad_mode=grad_mode)
         batch = batch_specs(mcfg, B, S)
         abstract_state = jax.eval_shape(
             lambda key: steps_lib.init_train_state(mcfg, tcfg, key, B),

@@ -17,8 +17,6 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.features import svd_features
-from repro.core.grad_features import logit_error_embeddings
 from repro.distributed.sharding import constrain
 from repro.models import decode as decode_lib
 from repro.models import model as model_lib
@@ -26,6 +24,7 @@ from repro.optim import OptimizerConfig, make_optimizer
 from repro.selection import base as selection_base
 from repro.selection import graft as graft_lib
 from repro.selection import registry as sampler_registry
+from repro.selection import sources as sources_lib
 
 PyTree = Any
 
@@ -106,12 +105,18 @@ def selection_inputs(mcfg, tcfg: TrainConfig, params, batch
                      ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """One full-batch forward → (V (K,R_max), G (d,K), ḡ (d,), scores (K,)).
 
-    Features = relevance-ordered SVD of mean-pooled final hiddens (the
-    paper's encoder/'Warm' feature path); gradient embeddings = per-example
-    probe gradients from the softmax error signal (no extra backward);
-    scores = per-example probe cross-entropy (drives ``loss_topk``-style
-    samplers for free — same logits).
+    The feature path (V) and gradient-embedding path (G) are resolved from
+    the ``repro.selection.sources`` registries by ``GraftConfig.feature_mode``
+    (``svd`` | ``pca_sketch`` | ``pooled_raw``) and ``GraftConfig.grad_mode``
+    (``probe`` | ``logit_embed``). Defaults reproduce the paper's setup:
+    relevance-ordered SVD of mean-pooled final hiddens × per-example probe
+    gradients from the softmax error signal (no extra backward). Scores =
+    per-example probe cross-entropy (drives ``loss_topk``-style samplers for
+    free — same logits).
     """
+    gcfg = tcfg.graft
+    extractor = sources_lib.resolve_features(gcfg.feature_mode)
+    grad_source = sources_lib.resolve_grad_source(gcfg.grad_mode)
     h, mask = model_lib.forward_hiddens(mcfg, params, batch)
     h = jax.lax.stop_gradient(h)
     S = h.shape[1]
@@ -124,15 +129,16 @@ def selection_inputs(mcfg, tcfg: TrainConfig, params, batch
             [jnp.zeros((labels.shape[0], pad), labels.dtype), labels], axis=1)
     lp = labels[:, ::stride]
     logits = model_lib.logits_from_hiddens(mcfg, params, hp)
-    emb = logit_error_embeddings(logits, lp, hp)   # (K, E) f32
-    emb = constrain(emb, ("act_batch", None))
+    emb = grad_source(sources_lib.GradSourceInputs(
+        logits=logits, labels=lp, hiddens=hp, mcfg=mcfg, params=params))
+    emb = constrain(emb, ("act_batch", None))      # (K, E) f32
     logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
     scores = -jnp.mean(jnp.take_along_axis(logp, lp[..., None], axis=-1)[..., 0],
                        axis=-1)                    # (K,) probe CE per example
     # the K×R feature/gradient matrices are tiny — replicate for MaxVol
     pooled = jnp.sum(h.astype(jnp.float32) * mask[..., None], axis=1) / \
         jnp.maximum(jnp.sum(mask, axis=1), 1.0)[:, None]
-    V = svd_features(pooled, tcfg.graft.r_max)
+    V = extractor(pooled, gcfg.r_max)
     G = emb.T                                      # (d=E, K)
     g_bar = jnp.mean(emb, axis=0)
     return V, G, g_bar, scores
@@ -186,9 +192,9 @@ def graft_train_step(mcfg, tcfg: TrainConfig, state, batch):
 
     def do_select(_):
         V, G, g_bar, scores = selection_inputs(mcfg, tcfg, state["params"], batch)
-        # key=None: stochastic samplers derive a step-folded key themselves
+        key = selection_base.default_select_key(state["step"])
         return smp.select(gcfg, selection_base.SelectionInputs(
-            V, G, g_bar, scores), state["step"])
+            V, G, g_bar, scores, key), state["step"])
 
     if gcfg.refresh_every == 1:
         graft_state = do_select(None)
@@ -245,8 +251,9 @@ def selection_step(mcfg, tcfg: TrainConfig, state, batch):
     isolates the refresh cost for the amortization analysis (§Perf)."""
     smp = sampler_registry.get_sampler(tcfg.sampler)
     V, G, g_bar, scores = selection_inputs(mcfg, tcfg, state["params"], batch)
+    key = selection_base.default_select_key(state["step"])
     graft_state = smp.select(tcfg.graft, selection_base.SelectionInputs(
-        V, G, g_bar, scores), state["step"])
+        V, G, g_bar, scores, key), state["step"])
     new_state = dict(state, graft=graft_state)
     return new_state, {"rank": graft_state.rank,
                        "proj_error": graft_state.last_error}

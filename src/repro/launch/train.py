@@ -1,34 +1,27 @@
-"""Fault-tolerant training driver with GRAFT integrated.
+"""Legacy flat-config training driver — now a thin deprecation shim over
+``repro.api``.
 
-Runs for real on whatever devices exist (CPU tests / examples use the tiny
-configs; on TPU the same loop drives the production mesh). Features:
-auto-resume from the latest checkpoint, async + emergency checkpointing,
-data-pipeline state in the manifest, straggler monitoring, GRAFT on/off.
+``RunConfig`` and ``train(run)`` keep their exact signatures and report
+shape, but the loop itself lives in ``repro.api.Trainer``: the flat
+``RunConfig`` is translated to a declarative ``ExperimentConfig`` and every
+behavior the monolithic loop hardwired (checkpointing, eval, JSONL
+telemetry, straggler monitoring, preemption) is a ``Callback`` plugin.
+New code should use ``repro.api`` directly::
+
+    from repro.api import ExperimentConfig, Trainer
+    report = Trainer(ExperimentConfig()).fit()
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
 import json
-import os
-import time
 from typing import Any, Dict, Optional
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro import configs as config_lib
-from repro.checkpoint import CheckpointManager, EmergencySaver
-from repro.core.graft import GraftConfig
-from repro.data import DataConfig, SyntheticLM
-from repro.distributed import sharding as sh
-from repro.distributed.straggler import StragglerMonitor
-from repro.launch import steps as steps_lib
-from repro.launch.evaluate import make_eval_fn
-from repro.launch.mesh import make_host_mesh
-from repro.launch.metrics import MetricsLogger, train_step_flops
-from repro.optim import OptimizerConfig
+from repro.api.config import (ExperimentConfig, GraftConfig,
+                              ModelConfig as ApiModelConfig,
+                              OptimizerConfig,
+                              TrainConfig as ApiTrainConfig)
 
 
 @dataclasses.dataclass
@@ -55,100 +48,40 @@ class RunConfig:
     eval_every: int = 0                 # 0 = no held-out evaluation
 
 
-def build(run: RunConfig):
-    mcfg = (config_lib.get_smoke_config(run.arch) if run.smoke
-            else config_lib.get_config(run.arch))
-    graft = GraftConfig(rset=run.graft_rset, eps=run.graft_eps,
+def to_experiment(run: RunConfig) -> ExperimentConfig:
+    """Translate the flat legacy RunConfig into the declarative API config
+    (exact semantics: the two drivers produce identical trajectories)."""
+    graft = GraftConfig(rset=tuple(run.graft_rset), eps=run.graft_eps,
                         refresh_every=run.graft_refresh,
                         grad_mode="probe") if run.use_graft else None
-    tcfg = steps_lib.TrainConfig(
-        optimizer=OptimizerConfig(name=run.optimizer, learning_rate=run.lr,
-                                  schedule="cosine", total_steps=run.steps,
-                                  warmup_steps=max(run.steps // 20, 1)),
-        graft=graft, sampler=run.sampler, probe_positions=min(64, run.seq))
-    data = SyntheticLM(DataConfig(vocab_size=mcfg.vocab_size, seq_len=run.seq,
-                                  global_batch=run.batch, seed=run.seed))
-    return mcfg, tcfg, data
+    return ExperimentConfig(
+        model=ApiModelConfig(arch=run.arch, smoke=run.smoke),
+        train=ApiTrainConfig(
+            steps=run.steps, batch=run.batch, seq=run.seq, seed=run.seed,
+            sampler=run.sampler, probe_positions=min(64, run.seq),
+            log_every=run.log_every, eval_every=run.eval_every,
+            checkpoint_dir=run.checkpoint_dir,
+            checkpoint_every=run.checkpoint_every,
+            metrics_path=run.metrics_path, stop_after=run.stop_after),
+        graft=graft,
+        optimizer=OptimizerConfig(
+            name=run.optimizer, learning_rate=run.lr, schedule="cosine",
+            total_steps=run.steps, warmup_steps=max(run.steps // 20, 1)))
+
+
+def build(run: RunConfig):
+    """(deprecated) → (model config, step TrainConfig, data pipeline)."""
+    return to_experiment(run).build()
 
 
 def train(run: RunConfig, callbacks=None) -> Dict[str, Any]:
-    mcfg, tcfg, data = build(run)
-    mesh = make_host_mesh()
-    step_fn = steps_lib.make_train_step(mcfg, tcfg)
-    jitted = jax.jit(step_fn, donate_argnums=(0,))
-
-    ckpt = (CheckpointManager(run.checkpoint_dir, keep_last_n=2, async_save=True)
-            if run.checkpoint_dir else None)
-    saver = EmergencySaver()
-    monitor = StragglerMonitor()
-    eval_fn = (make_eval_fn(mcfg, batch=min(run.batch, 8), seq=run.seq,
-                            seed=run.seed) if run.eval_every else None)
-
-    with sh.sharding_rules(mesh):
-        state = steps_lib.init_train_state(
-            mcfg, tcfg, jax.random.PRNGKey(run.seed), run.batch)
-        start_step = 0
-        if ckpt is not None and ckpt.latest_step() is not None:
-            s = ckpt.latest_step()
-            manifest = ckpt.manifest(s)
-            state = ckpt.restore(s, state)
-            data.load_state_dict(manifest["extra"]["data"])
-            start_step = int(manifest["extra"]["train_step"])
-            print(f"[train] resumed from step {start_step}")
-
-        n_params = sum(int(np.prod(l.shape)) for l in
-                       jax.tree_util.tree_leaves(state["params"]))
-        logger = MetricsLogger(
-            run.metrics_path, num_chips=len(jax.devices()),
-            flops_per_step=train_step_flops(
-                n_params, run.batch * run.seq, remat=mcfg.remat != "none"))
-        history = []
-        it = iter(data)
-        # fast-forward the iterator to the checkpointed step
-        data.load_state_dict({"step": start_step})
-        t_start = time.time()
-        for step in range(start_step, run.steps):
-            batch_np = next(it)
-            batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
-            t0 = time.time()
-            state, metrics = jitted(state, batch)
-            metrics = {k: float(v) for k, v in metrics.items()}
-            dt = time.time() - t0
-            monitor.record(dt)
-            logger.log(step, metrics, tokens=run.batch * run.seq)
-            if eval_fn is not None and (step + 1) % run.eval_every == 0:
-                metrics.update(eval_fn(state["params"]))
-            history.append(metrics)
-            if callbacks:
-                for cb in callbacks:
-                    cb(step, state, metrics)
-            if step % run.log_every == 0:
-                extra = (f" rank={metrics.get('rank', 0):.0f}"
-                         f" align={metrics.get('alignment', 0):.3f}"
-                         if tcfg.use_graft else "")
-                print(f"[train] step {step:5d} loss {metrics['loss']:.4f} "
-                      f"gnorm {metrics['grad_norm']:.3f} {dt*1e3:.0f}ms{extra}",
-                      flush=True)
-            stop = saver.should_stop or (
-                run.stop_after is not None and step + 1 >= run.stop_after)
-            if ckpt is not None and (
-                    (step + 1) % run.checkpoint_every == 0 or stop or
-                    step + 1 == run.steps):
-                ckpt.save(step + 1, state,
-                          extra={"train_step": step + 1,
-                                 "data": data.state_dict(),
-                                 "metrics": metrics})
-            if stop:
-                print("[train] emergency checkpoint written — exiting")
-                break
-        if ckpt is not None:
-            ckpt.wait()
-        logger.close()
-    wall = time.time() - t_start
-    report = {"final_loss": history[-1]["loss"] if history else None,
-              "history": history, "wall_s": wall,
-              "straggler": monitor.summary()}
-    return report
+    """(deprecated) Train ``run`` via ``repro.api.Trainer``. ``callbacks``
+    are legacy per-step functions ``fn(step, state, metrics)``."""
+    from repro.api.callbacks import LegacyFunctionCallback
+    from repro.api.trainer import Trainer
+    extra = ([LegacyFunctionCallback(cb) for cb in callbacks]
+             if callbacks else None)
+    return Trainer(to_experiment(run), callbacks=extra).fit()
 
 
 def main(argv=None):

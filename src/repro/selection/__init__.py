@@ -12,8 +12,15 @@ Quick tour::
 
 ``registry.available()`` lists samplers; add your own with
 ``registry.register(Sampler(name, fn))``.
+
+The selection *inputs* are pluggable too: ``sources.resolve_features`` /
+``sources.resolve_grad_source`` pick the feature path (``svd`` |
+``pca_sketch`` | ``pooled_raw``) and gradient-embedding path (``probe`` |
+``logit_embed``) by the names in ``GraftConfig.feature_mode`` /
+``GraftConfig.grad_mode``.
 """
 from repro.selection import samplers as _samplers  # noqa: F401 (registers defaults)
+from repro.selection import sources
 from repro.selection.base import (GraftConfig, Sampler, SamplerConfig,
                                   SelectionInputs, SelectionState, init_state)
 from repro.selection.engine import (make_sharded_selector, select_batch,
@@ -21,6 +28,11 @@ from repro.selection.engine import (make_sharded_selector, select_batch,
 from repro.selection.graft import (GraftState, graft_select, maybe_refresh,
                                    select_from_batch)
 from repro.selection.registry import available, get_sampler, register
+from repro.selection.sources import (FeatureExtractor, GradSource,
+                                     GradSourceInputs, available_features,
+                                     available_grad_sources,
+                                     register_features, register_grad_source,
+                                     resolve_features, resolve_grad_source)
 
 __all__ = [
     "GraftConfig", "SamplerConfig", "Sampler", "SelectionInputs",
@@ -29,4 +41,7 @@ __all__ = [
     "select_batch", "select_multi_batch", "select_sharded",
     "make_sharded_selector",
     "available", "get_sampler", "register",
+    "sources", "FeatureExtractor", "GradSource", "GradSourceInputs",
+    "resolve_features", "resolve_grad_source", "register_features",
+    "register_grad_source", "available_features", "available_grad_sources",
 ]

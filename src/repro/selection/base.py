@@ -22,8 +22,9 @@ class GraftConfig:
     rset: Tuple[int, ...] = (8, 16, 32, 64)   # candidate ranks, ascending
     eps: float = 0.25                          # projection-error threshold
     refresh_every: int = 20                    # S in the paper (20–50)
-    feature_mode: str = "svd"                 # svd | pca | ica | encoder
-    grad_mode: str = "probe"                  # probe | full | logit_embed
+    feature_mode: str = "svd"                 # svd | pca_sketch | pooled_raw
+    grad_mode: str = "probe"                  # probe | logit_embed
+                                              # (registries: selection/sources.py)
     use_pallas: bool = False                   # TPU kernels vs jnp reference
 
     def __post_init__(self):
@@ -60,6 +61,13 @@ class SelectionInputs(NamedTuple):
     g_bar: jax.Array                   # (d,) batch mean gradient
     scores: Optional[jax.Array] = None  # (K,) per-sample scores
     key: Optional[jax.Array] = None     # PRNG key
+
+
+def default_select_key(step) -> jax.Array:
+    """Step-folded PRNG key for stochastic samplers when the caller supplies
+    none — the ONE derivation shared by the engine paths and the in-step
+    selection path, so they sample identically."""
+    return jax.random.fold_in(jax.random.PRNGKey(0), jnp.int32(step))
 
 
 def init_state(cfg: GraftConfig, batch_size: int) -> SelectionState:
@@ -112,6 +120,8 @@ class Sampler:
                step=0) -> SelectionState:
         if self.needs_scores and inputs.scores is None:
             raise ValueError(f"sampler '{self.name}' requires SelectionInputs.scores")
+        if self.needs_key and inputs.key is None:
+            raise ValueError(f"sampler '{self.name}' requires SelectionInputs.key")
         return self.fn(cfg, inputs, jnp.int32(step))
 
     def init_state(self, cfg: GraftConfig, batch_size: int) -> SelectionState:

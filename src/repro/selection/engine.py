@@ -31,13 +31,14 @@ from repro.distributed import sharding as sh
 from repro.selection import graft as graft_lib
 from repro.selection import registry
 from repro.selection.base import (GraftConfig, Sampler, SelectionInputs,
-                                  SelectionState)
+                                  SelectionState, default_select_key)
 
 SamplerLike = Union[str, Sampler]
 
 
-def _default_key(step) -> jax.Array:
-    return jax.random.fold_in(jax.random.PRNGKey(0), jnp.int32(step))
+# shared step-folded derivation — kept under the old name for engine-internal
+# call sites
+_default_key = default_select_key
 
 
 def _resolve(cfg: GraftConfig, sampler: SamplerLike, scores) -> Sampler:

@@ -23,7 +23,8 @@ import jax.numpy as jnp
 
 import repro.core.baselines as baselines_lib
 from repro.selection.base import (GraftConfig, Sampler, SelectionInputs,
-                                  SelectionState, finalize_state)
+                                  SelectionState, default_select_key,
+                                  finalize_state)
 from repro.selection.graft import graft_sampler_fn
 from repro.selection.registry import register
 
@@ -31,7 +32,7 @@ from repro.selection.registry import register
 def _key_for(inputs: SelectionInputs, step: jax.Array) -> jax.Array:
     if inputs.key is not None:
         return inputs.key
-    return jax.random.fold_in(jax.random.PRNGKey(0), step)
+    return default_select_key(step)
 
 
 def _uniform_weights(r_max: int) -> jax.Array:

@@ -1,0 +1,215 @@
+"""Feature-extractor / gradient-source registries for the selection inputs.
+
+Mirrors ``selection/registry.py``: the two halves of GRAFT's selection
+forward — how per-example *features* (the ``V`` matrix MaxVol pivots on)
+and per-example *gradient embeddings* (the ``G`` matrix the rank sweep
+projects) are produced — are named, registered strategies instead of code
+baked into the train step. ``launch/steps.py:selection_inputs`` resolves
+them from ``GraftConfig.feature_mode`` / ``GraftConfig.grad_mode``, so an
+experiment switches feature paths declaratively (``--graft.feature_mode=
+pca_sketch``) with no loop edits.
+
+Built-in feature extractors (``(K, M) array, rank → (K, rank)``, columns
+relevance-ordered as Fast MaxVol requires):
+
+  * ``svd``         — relevance-ordered SVD of the pooled hiddens (the
+                      paper's encoder/'Warm' path; default)
+  * ``pca_sketch``  — Gaussian sketch to O(rank) columns, then PCA: the
+                      sketch-based feature path (SAGE-style) whose cost is
+                      independent of d_model
+  * ``pooled_raw``  — raw pooled hiddens, columns ordered by energy; no
+                      factorization at all (the cheapest baseline)
+
+Built-in gradient sources (``GradSourceInputs → (K, E) embeddings``):
+
+  * ``probe``       — loss-scaled, error-norm-weighted pooled hiddens from
+                      the softmax error signal (no extra backward; default)
+  * ``logit_embed`` — exact per-example head-input gradient Wᵀ(p − y)
+                      averaged over probe positions (one extra matmul with
+                      the unembedding, still no backward pass)
+
+Remaining gaps (see ROADMAP): ``encoder`` features (model-based AE
+embeddings need a second encoder's params plumbed in), ``ica`` features
+(kurtosis ordering is brittle at probe batch sizes), and the exact ``full``
+per-sample-gradient source from ``core/grad_features.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import features as features_lib
+from repro.core.grad_features import logit_error_embeddings
+
+
+class GradSourceInputs(NamedTuple):
+    """Everything a gradient source may read. ``logits``/``labels``/
+    ``hiddens`` are probe-position slices (K, S', ·); ``mcfg``/``params``
+    give head-aware sources access to the unembedding."""
+    logits: jax.Array            # (K, S', V) probe-position logits
+    labels: jax.Array            # (K, S') probe-position labels
+    hiddens: jax.Array           # (K, S', E) probe-position hiddens
+    mcfg: Any = None             # model config (static)
+    params: Any = None           # model params pytree
+
+
+@dataclasses.dataclass(frozen=True)
+class FeatureExtractor:
+    """A registered feature path: ``fn(A, rank) → V`` with ``A`` the pooled
+    per-example matrix (K, M) and ``V`` (K, rank) relevance-ordered. Must be
+    jit/vmap-traceable for a static ``rank``."""
+    name: str
+    fn: Callable[[jax.Array, int], jax.Array]
+
+    def __call__(self, A: jax.Array, rank: int) -> jax.Array:
+        return self.fn(A, rank)
+
+
+@dataclasses.dataclass(frozen=True)
+class GradSource:
+    """A registered gradient-embedding path: ``fn(inputs) → (K, E)``."""
+    name: str
+    fn: Callable[[GradSourceInputs], jax.Array]
+    needs_params: bool = False   # reads inputs.params/mcfg (head weights)
+
+    def __call__(self, inputs: GradSourceInputs) -> jax.Array:
+        if self.needs_params and inputs.params is None:
+            raise ValueError(
+                f"grad source '{self.name}' requires GradSourceInputs.params")
+        return self.fn(inputs)
+
+
+_FEATURES: Dict[str, FeatureExtractor] = {}
+_GRAD_SOURCES: Dict[str, GradSource] = {}
+
+
+def register_features(extractor: FeatureExtractor, *,
+                      overwrite: bool = False) -> FeatureExtractor:
+    if not overwrite and extractor.name in _FEATURES:
+        raise ValueError(f"feature extractor '{extractor.name}' already registered")
+    _FEATURES[extractor.name] = extractor
+    return extractor
+
+
+def register_grad_source(source: GradSource, *,
+                         overwrite: bool = False) -> GradSource:
+    if not overwrite and source.name in _GRAD_SOURCES:
+        raise ValueError(f"grad source '{source.name}' already registered")
+    _GRAD_SOURCES[source.name] = source
+    return source
+
+
+def resolve_features(name: Union[str, FeatureExtractor]) -> FeatureExtractor:
+    if isinstance(name, FeatureExtractor):
+        return name
+    if name not in _FEATURES:
+        raise KeyError(f"unknown feature extractor '{name}'; "
+                       f"available: {available_features()}")
+    return _FEATURES[name]
+
+
+def resolve_grad_source(name: Union[str, GradSource]) -> GradSource:
+    if isinstance(name, GradSource):
+        return name
+    if name not in _GRAD_SOURCES:
+        raise KeyError(f"unknown grad source '{name}'; "
+                       f"available: {available_grad_sources()}")
+    return _GRAD_SOURCES[name]
+
+
+def available_features() -> Tuple[str, ...]:
+    return tuple(sorted(_FEATURES))
+
+
+def available_grad_sources() -> Tuple[str, ...]:
+    return tuple(sorted(_GRAD_SOURCES))
+
+
+# ---------------------------------------------------------------------------
+# built-in feature extractors
+# ---------------------------------------------------------------------------
+
+_SKETCH_SEED = 0x5A6E
+
+
+def pca_sketch_features(A: jax.Array, rank: int) -> jax.Array:
+    """Gaussian sketch to O(rank) columns, then PCA.
+
+    The sketch matrix is a fixed function of (M, width) — deterministic
+    across steps, so the feature basis is stable between refreshes — and the
+    downstream eigendecomposition works on a (K, width) matrix whose width
+    is independent of d_model.
+    """
+    A = A.reshape(A.shape[0], -1).astype(jnp.float32)
+    M = A.shape[1]
+    width = min(M, max(4 * rank, rank + 8))
+    if M > width:
+        S = jax.random.normal(jax.random.PRNGKey(_SKETCH_SEED),
+                              (M, width), dtype=jnp.float32)
+        A = A @ (S / jnp.sqrt(jnp.float32(width)))
+    return features_lib.pca_features(A, rank)
+
+
+def pooled_raw_features(A: jax.Array, rank: int) -> jax.Array:
+    """Raw pooled matrix, columns energy-ordered and truncated to ``rank``.
+
+    No factorization — the relevance ordering precondition is approximated
+    by descending column energy. Zero-pads when the source has fewer than
+    ``rank`` columns so downstream shapes stay static.
+    """
+    A = A.reshape(A.shape[0], -1).astype(jnp.float32)
+    K, M = A.shape
+    cols = min(rank, M)
+    energy = jnp.sum(A * A, axis=0)
+    order = jnp.argsort(-energy)[:cols]
+    V = jnp.take(A, order, axis=1)
+    if cols < rank:
+        V = jnp.concatenate(
+            [V, jnp.zeros((K, rank - cols), jnp.float32)], axis=1)
+    return V
+
+
+SVD = register_features(FeatureExtractor("svd", features_lib.svd_features))
+PCA_SKETCH = register_features(FeatureExtractor("pca_sketch", pca_sketch_features))
+POOLED_RAW = register_features(FeatureExtractor("pooled_raw", pooled_raw_features))
+
+
+# ---------------------------------------------------------------------------
+# built-in gradient sources
+# ---------------------------------------------------------------------------
+
+def probe_grad_source(inp: GradSourceInputs) -> jax.Array:
+    """Probe-gradient surrogate from the softmax error signal (no backward):
+    loss-scaled, error-norm-weighted pooled hiddens. See
+    ``core/grad_features.py:logit_error_embeddings``."""
+    return logit_error_embeddings(inp.logits, inp.labels, inp.hiddens)
+
+
+def logit_embed_grad_source(inp: GradSourceInputs) -> jax.Array:
+    """Exact per-example gradient of the probe CE w.r.t. the head input,
+    ``Wᵀ(p − y)`` averaged over probe positions — one extra matmul with the
+    unembedding, still no backward pass. Returns (K, d_model)."""
+    mcfg, params = inp.mcfg, inp.params
+    if mcfg is not None and getattr(mcfg, "tie_embeddings", False):
+        head = params["embed"].T                       # (D, V)
+    elif "lm_head" in params:
+        head = params["lm_head"]
+    elif "embed" in params:
+        head = params["embed"].T
+    else:
+        raise ValueError("logit_embed grad source needs an unembedding "
+                         "('lm_head' or tied 'embed') in params")
+    logp = jax.nn.log_softmax(inp.logits.astype(jnp.float32), axis=-1)
+    p = jnp.exp(logp)
+    onehot = jax.nn.one_hot(inp.labels, inp.logits.shape[-1], dtype=jnp.float32)
+    err = p - onehot                                   # (K, S', V)
+    emb = jnp.einsum("ksv,dv->kd", err, head.astype(jnp.float32))
+    return emb / jnp.float32(err.shape[1])
+
+
+PROBE = register_grad_source(GradSource("probe", probe_grad_source))
+LOGIT_EMBED = register_grad_source(
+    GradSource("logit_embed", logit_embed_grad_source, needs_params=True))

@@ -1,0 +1,302 @@
+"""Unified Experiment API: config round-trips, CLI overrides, hashing,
+Trainer lifecycle hooks, checkpoint-before-stop ordering, resume from the
+manifest-embedded config alone, and legacy-shim equivalence."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.api import (Callback, ExperimentConfig, GraftConfig, HookRecorder,
+                       ModelConfig, TrainConfig, Trainer, resume)
+from repro.api.config import apply_overrides
+from repro.launch.metrics import read_metrics
+from repro.launch.train import RunConfig, to_experiment, train
+
+SMALL = dict(steps=6, batch=8, seq=16, seed=3, log_every=0)
+
+
+def small_cfg(**train_kw):
+    kw = dict(SMALL, **train_kw)
+    return ExperimentConfig(train=TrainConfig(**kw),
+                            graft=GraftConfig(rset=(2, 4), refresh_every=3))
+
+
+class TestExperimentConfig:
+    def test_json_round_trip_equality(self):
+        cfg = ExperimentConfig(
+            model=ModelConfig(arch="stablelm-12b", smoke=True,
+                              overrides={"num_layers": 2}),
+            train=TrainConfig(steps=12, batch=4, seq=32, sampler="loss_topk",
+                              metrics_path="/tmp/m.jsonl"),
+            graft=GraftConfig(rset=(2, 4), eps=0.3, feature_mode="pca_sketch",
+                              grad_mode="logit_embed"))
+        assert ExperimentConfig.from_json(cfg.to_json()) == cfg
+        # finalized configs round-trip too (the manifest-embedded form)
+        fin = cfg.finalized()
+        assert ExperimentConfig.from_json(fin.to_json()) == fin
+
+    def test_round_trip_preserves_none_graft(self):
+        cfg = ExperimentConfig(graft=None)
+        back = ExperimentConfig.from_json(cfg.to_json())
+        assert back.graft is None and back == cfg
+
+    def test_rset_round_trips_as_tuple(self):
+        cfg = ExperimentConfig(graft=GraftConfig(rset=(2, 4)))
+        back = ExperimentConfig.from_json(cfg.to_json())
+        assert back.graft.rset == (2, 4)
+        assert isinstance(back.graft.rset, tuple)
+
+    def test_finalized_derives_and_is_idempotent(self):
+        cfg = ExperimentConfig(train=TrainConfig(steps=40, seq=32))
+        fin = cfg.finalized()
+        assert fin.optimizer.total_steps == 40
+        assert fin.optimizer.warmup_steps == 2
+        assert fin.train.probe_positions == 32
+        assert fin.data is not None and fin.data.seq_len == 32
+        assert fin.finalized() == fin
+
+    def test_cli_override_parsing(self):
+        cfg = ExperimentConfig().apply_overrides([
+            "train.steps=7", "graft.eps=0.5", "graft.rset=[2,4]",
+            "model.arch=stablelm-12b", "optimizer.name=lion",
+            "train.metrics_path=/tmp/x.jsonl", "graft.feature_mode=pca_sketch",
+        ])
+        assert cfg.train.steps == 7
+        assert cfg.graft.eps == 0.5
+        assert cfg.graft.rset == (2, 4)
+        assert cfg.model.arch == "stablelm-12b"
+        assert cfg.optimizer.name == "lion"
+        assert cfg.train.metrics_path == "/tmp/x.jsonl"
+        assert cfg.graft.feature_mode == "pca_sketch"
+        # comma shorthand for tuples
+        assert apply_overrides(cfg, ["graft.rset=2,4,8"]).graft.rset == (2, 4, 8)
+
+    def test_data_override_derives_from_model_and_train(self):
+        """Regression: a data.* override on the default (data=None) config
+        must derive the section from model/train — raw DataConfig defaults
+        would silently train on mismatched vocab/batch/seq (NaN loss)."""
+        cfg = ExperimentConfig().apply_overrides(
+            ["train.batch=8", "train.seq=16", "data.seed=5"])
+        assert cfg.data.seed == 5
+        assert cfg.data.global_batch == 8 and cfg.data.seq_len == 16
+        assert cfg.data.vocab_size == cfg.model.build().vocab_size
+
+    def test_override_disable_and_reenable_graft(self):
+        cfg = ExperimentConfig().apply_overrides(["graft=none"])
+        assert cfg.graft is None
+        cfg = cfg.apply_overrides(["graft.eps=0.4"])   # re-enables from defaults
+        assert cfg.graft is not None and cfg.graft.eps == 0.4
+
+    def test_override_errors(self):
+        with pytest.raises(KeyError, match="unknown config section"):
+            ExperimentConfig().apply_overrides(["nope.steps=1"])
+        with pytest.raises(KeyError, match="unknown field"):
+            ExperimentConfig().apply_overrides(["train.bogus=1"])
+        with pytest.raises(ValueError, match="key=value"):
+            ExperimentConfig().apply_overrides(["train.steps"])
+
+    def test_steps_override_on_finalized_rederives_schedule(self):
+        """Regression: overriding train.steps on a previously-finalized
+        config (the --dump-config / manifest form) must re-derive the LR
+        horizon — not keep cosine total_steps at the old value and train
+        the tail at ~zero LR."""
+        dumped = ExperimentConfig(train=TrainConfig(steps=5)).finalized()
+        assert dumped.optimizer.total_steps == 5
+        big = dumped.apply_overrides(["train.steps=500"]).finalized()
+        assert big.optimizer.total_steps == 500
+        assert big.optimizer.warmup_steps == 25
+        # data + probe_positions re-derive too
+        wide = dumped.apply_overrides(["train.batch=8", "train.seq=32"])
+        fin = wide.finalized()
+        assert fin.data.global_batch == 8 and fin.data.seq_len == 32
+        assert fin.train.probe_positions == 32
+        # explicitly-set optimizer fields survive a steps override
+        explicit = ExperimentConfig().apply_overrides(
+            ["optimizer.total_steps=10000", "train.steps=500"])
+        assert explicit.optimizer.total_steps == 10000
+
+    def test_mismatched_data_section_errors_loudly(self):
+        """An explicit data section that disagrees with model/train must
+        raise in build() (a vocab mismatch otherwise NaNs silently)."""
+        from repro.api import DataConfig
+        cfg = ExperimentConfig(
+            train=TrainConfig(steps=2, batch=8, seq=16),
+            data=DataConfig(vocab_size=999, seq_len=16, global_batch=8))
+        with pytest.raises(ValueError, match="vocab_size"):
+            cfg.build()
+        # order-dependent override (data derived before train changed)
+        stale = ExperimentConfig().apply_overrides(
+            ["data.num_clusters=4", "train.batch=8"])
+        with pytest.raises(ValueError, match="global_batch"):
+            stale.build()
+
+    def test_config_hash_ignores_run_environment(self):
+        a = small_cfg()
+        b = small_cfg(stop_after=3, checkpoint_dir="/tmp/ck",
+                      metrics_path="/tmp/m.jsonl", log_every=2)
+        c = small_cfg(steps=7)                       # trajectory-shaping
+        assert a.config_hash() == b.config_hash()
+        assert a.config_hash() != c.config_hash()
+        assert a.config_hash() != small_cfg(seed=4).config_hash()
+
+
+class TestTrainerLifecycle:
+    def test_checkpoint_before_stop_on_preemption(self, tmp_path):
+        """Simulated preemption (stop_after): the emergency checkpoint hook
+        must fire before the loop exits and before on_train_end."""
+        rec = HookRecorder()
+        cfg = small_cfg(stop_after=4, checkpoint_dir=str(tmp_path / "ck"),
+                        checkpoint_every=100)        # only the stop triggers it
+        report = Trainer(cfg, callbacks=[rec]).fit()
+        events = rec.events
+        assert ("on_checkpoint", 3) in events
+        assert events.index(("on_checkpoint", 3)) < \
+            events.index(("on_train_end", None))
+        assert events[0] == ("on_train_start", None)
+        assert events[-1] == ("on_train_end", None)
+        assert report["stopped"] == "stop_after"
+        assert len(report["history"]) == 4
+
+    def test_callback_priority_ordering(self):
+        order = []
+
+        class A(Callback):
+            priority = 5
+
+            def on_step_end(self, trainer, step, metrics):
+                order.append("A")
+
+        class B(Callback):
+            priority = 80
+
+            def on_step_end(self, trainer, step, metrics):
+                order.append("B")
+
+        Trainer(small_cfg(steps=1), callbacks=[B(), A()]).fit()
+        assert order == ["A", "B"]
+
+    def test_default_priority_user_stop_is_checkpointed(self, tmp_path):
+        """A user callback at the DEFAULT priority calling request_stop must
+        still get its stop checkpointed in the same step (default priority
+        sorts before the checkpointer)."""
+        class Stopper(Callback):
+            def on_step_end(self, trainer, step, metrics):
+                if step == 1:
+                    trainer.request_stop("custom")
+
+        rec = HookRecorder()
+        cfg = small_cfg(checkpoint_dir=str(tmp_path / "ck"),
+                        checkpoint_every=100)
+        report = Trainer(cfg, callbacks=[Stopper(), rec]).fit()
+        assert report["stopped"] == "custom"
+        assert ("on_checkpoint", 1) in rec.events
+        assert len(report["history"]) == 2
+
+    def test_on_checkpoint_fires_after_commit(self, tmp_path):
+        """The on_checkpoint contract is 'after the checkpoint commits' —
+        with async saves the manifest must already be on disk when the hook
+        fires (a listener uploading `path` must not race the writer)."""
+        import os
+        seen = []
+
+        class Uploader(Callback):
+            def on_checkpoint(self, trainer, step, path):
+                seen.append(os.path.exists(
+                    os.path.join(path, "manifest.json")))
+
+        cfg = small_cfg(steps=4, checkpoint_dir=str(tmp_path / "ck"),
+                        checkpoint_every=2)
+        Trainer(cfg, callbacks=[Uploader()]).fit()
+        assert len(seen) == 2 and all(seen)
+
+    def test_eval_metrics_reach_jsonl_stream(self, tmp_path):
+        """Regression (legacy bug): telemetry logged before eval merged, so
+        eval_loss never hit the JSONL stream. One row per step, eval rows
+        carrying eval_loss/eval_ppl."""
+        mpath = str(tmp_path / "metrics.jsonl")
+        report = Trainer(small_cfg(eval_every=3, metrics_path=mpath)).fit()
+        rows = read_metrics(mpath)
+        assert len(rows) == 6                        # exactly one row per step
+        eval_rows = [r for r in rows if "eval_loss" in r]
+        assert [r["step"] for r in eval_rows] == [2, 5]
+        assert all("eval_ppl" in r for r in eval_rows)
+        assert any("eval_ppl" in h for h in report["history"])
+
+
+class TestResumeFromManifest:
+    def test_resume_reconstructs_config_and_metrics(self, tmp_path):
+        """Kill via stop_after → resume from the manifest-embedded config
+        ALONE (no flags) → same config hash and same final loss as an
+        uninterrupted run."""
+        full = Trainer(small_cfg(steps=8)).fit()
+        ck = str(tmp_path / "ck")
+        interrupted = small_cfg(steps=8, stop_after=4, checkpoint_dir=ck,
+                                checkpoint_every=100)
+        Trainer(interrupted).fit()
+
+        resumed_trainer = Trainer.from_checkpoint(ck)
+        assert resumed_trainer.config.train.stop_after is None
+        assert resumed_trainer.config.config_hash() == \
+            interrupted.config_hash() == full["config_hash"]
+        report = resumed_trainer.fit()
+        np.testing.assert_allclose(full["final_loss"], report["final_loss"],
+                                   rtol=1e-6)
+        assert len(report["history"]) == 4           # steps 4..7 only
+
+    def test_resume_helper(self, tmp_path):
+        ck = str(tmp_path / "ck")
+        Trainer(small_cfg(steps=4, stop_after=2, checkpoint_dir=ck,
+                          checkpoint_every=100)).fit()
+        report = resume(ck)
+        assert len(report["history"]) == 2
+
+    def test_resume_dump_config_does_not_train(self, tmp_path, capsys):
+        from repro.api.cli import main
+        ck = str(tmp_path / "ck")
+        Trainer(small_cfg(steps=4, stop_after=2, checkpoint_dir=ck,
+                          checkpoint_every=100)).fit()
+        capsys.readouterr()
+        assert main(["--resume", ck, "--dump-config"]) == 0
+        dumped = json.loads(capsys.readouterr().out)
+        cfg = ExperimentConfig.from_dict(dumped)
+        assert cfg.train.stop_after is None          # consumed by the kill
+        assert cfg.train.checkpoint_dir == ck
+
+    def test_resume_without_checkpoint_raises(self, tmp_path):
+        from repro.checkpoint import load_experiment
+        with pytest.raises(FileNotFoundError):
+            load_experiment(str(tmp_path / "empty"))
+
+
+class TestLegacyShim:
+    def test_run_config_translation_and_identical_loss(self):
+        run = RunConfig(**SMALL, graft_rset=(2, 4), graft_refresh=3)
+        cfg = to_experiment(run)
+        assert cfg.graft.rset == (2, 4)
+        r_legacy = train(run)
+        r_api = Trainer(cfg).fit()
+        assert r_legacy["final_loss"] == r_api["final_loss"]
+        assert "straggler" in r_legacy
+
+    def test_legacy_function_callbacks_still_fire(self):
+        seen = []
+        train(RunConfig(steps=2, batch=8, seq=16, log_every=0,
+                        graft_rset=(2, 4)),
+              callbacks=[lambda step, state, metrics: seen.append(step)])
+        assert seen == [0, 1]
+
+
+class TestApiCli:
+    def test_dump_config_round_trips(self, capsys):
+        from repro.api.cli import main
+        rc = main(["--train.steps=3", "--graft.eps=0.4", "--dump-config"])
+        assert rc == 0
+        dumped = json.loads(capsys.readouterr().out)
+        cfg = ExperimentConfig.from_dict(dumped)
+        assert cfg.train.steps == 3 and cfg.graft.eps == 0.4
+        assert cfg.finalized() == cfg                # dump emits finalized form
+
+    def test_bad_override_is_an_error(self, capsys):
+        from repro.api.cli import main
+        with pytest.raises(SystemExit):
+            main(["positional"])

@@ -85,6 +85,31 @@ class TestSamplerContracts:
         with pytest.raises(ValueError, match="scores"):
             engine.select_batch(CFG, "loss_topk", V, G, gb)
 
+    def test_declared_requirements_enforced(self, rng):
+        """Every registered sampler's declared optional-input requirements
+        (needs_scores AND needs_key) must actually be validated by
+        Sampler.select — not just documented."""
+        V, G, gb = _inputs(rng)
+        scores = jnp.asarray(rng.random(V.shape[0]).astype(np.float32))
+        key = jax.random.PRNGKey(0)
+        for name in available():
+            smp = get_sampler(name)
+            if smp.needs_scores:
+                with pytest.raises(ValueError, match="scores"):
+                    smp.select(CFG, SelectionInputs(V, G, gb, None, key))
+            if smp.needs_key:
+                with pytest.raises(ValueError, match="key"):
+                    smp.select(CFG, SelectionInputs(V, G, gb, scores, None))
+            # with both supplied, every sampler must select
+            st = smp.select(CFG, SelectionInputs(V, G, gb, scores, key))
+            assert isinstance(st, SelectionState)
+
+    def test_random_requires_key_via_select(self, rng):
+        V, G, gb = _inputs(rng)
+        assert get_sampler("random").needs_key
+        with pytest.raises(ValueError, match="key"):
+            get_sampler("random").select(CFG, SelectionInputs(V, G, gb))
+
     def test_loss_topk_picks_highest_scores(self, rng):
         K = 16
         V, G, gb = _inputs(rng, K=K)
@@ -251,3 +276,79 @@ class TestCompatShim:
         assert core.GraftConfig is GraftConfig
         cfg = core.GraftConfig(rset=(2, 4))
         assert cfg.r_max == 4
+
+
+class TestSourcesRegistry:
+    """Feature-extractor / gradient-source registries (selection inputs)."""
+
+    def test_builtins_registered(self):
+        from repro.selection import available_features, available_grad_sources
+        for f in ("svd", "pca_sketch", "pooled_raw"):
+            assert f in available_features()
+        for g in ("probe", "logit_embed"):
+            assert g in available_grad_sources()
+
+    def test_unknown_names_error_with_available(self):
+        from repro.selection import resolve_features, resolve_grad_source
+        with pytest.raises(KeyError, match="unknown feature extractor"):
+            resolve_features("bogus")
+        with pytest.raises(KeyError, match="unknown grad source"):
+            resolve_grad_source("bogus")
+
+    @pytest.mark.parametrize("name", ["svd", "pca_sketch", "pooled_raw"])
+    def test_feature_extractors_shapes_and_order(self, rng, name):
+        from repro.selection import resolve_features
+        K, M, R = 16, 48, 4
+        A = jnp.asarray(rng.normal(size=(K, M)).astype(np.float32))
+        V = resolve_features(name)(A, R)
+        assert V.shape == (K, R)
+        assert bool(jnp.all(jnp.isfinite(V)))
+        # relevance ordering: column energy must be non-increasing
+        energy = np.asarray(jnp.sum(V * V, axis=0))
+        assert np.all(energy[:-1] >= energy[1:] - 1e-4), energy
+
+    def test_pooled_raw_pads_when_narrow(self, rng):
+        from repro.selection import resolve_features
+        A = jnp.asarray(rng.normal(size=(8, 3)).astype(np.float32))
+        V = resolve_features("pooled_raw")(A, 6)
+        assert V.shape == (8, 6)
+        assert bool(jnp.all(V[:, 3:] == 0.0))
+
+    def test_grad_sources_through_selection_inputs(self, rng):
+        """selection_inputs resolves feature/grad modes from GraftConfig —
+        every registered combination must produce well-shaped V/G/scores."""
+        import dataclasses as dc
+        from repro import configs
+        from repro.launch import steps as steps_lib
+        from repro.launch.specs import default_train_config
+        from repro.models import model as M
+        mcfg = configs.get_smoke_config("minicpm-2b")
+        params = M.init_params(mcfg, jax.random.PRNGKey(0))
+        toks = jnp.asarray(rng.integers(0, mcfg.vocab_size, (8, 32)),
+                           dtype=jnp.int32)
+        batch = {"tokens": toks, "labels": toks}
+        for fm in ("svd", "pca_sketch", "pooled_raw"):
+            for gm in ("probe", "logit_embed"):
+                tcfg = default_train_config("minicpm-2b", batch=8,
+                                            feature_mode=fm, grad_mode=gm)
+                assert tcfg.graft.feature_mode == fm
+                V, G, gbar, scores = steps_lib.selection_inputs(
+                    mcfg, tcfg, params, batch)
+                assert V.shape == (8, tcfg.graft.r_max)
+                assert G.shape[1] == 8 and gbar.shape == (G.shape[0],)
+                assert scores.shape == (8,)
+                assert bool(jnp.all(jnp.isfinite(V)))
+                assert bool(jnp.all(jnp.isfinite(G)))
+        del dc
+
+    def test_custom_registration_and_overwrite_guard(self):
+        from repro.selection import sources
+        fx = sources.FeatureExtractor("custom_feat_test",
+                                      lambda A, r: A[:, :r])
+        try:
+            sources.register_features(fx)
+            assert sources.resolve_features("custom_feat_test") is fx
+            with pytest.raises(ValueError, match="already registered"):
+                sources.register_features(fx)
+        finally:
+            sources._FEATURES.pop("custom_feat_test", None)
