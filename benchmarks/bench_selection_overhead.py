@@ -1,11 +1,29 @@
 """Paper Table 7 / §3.3: empirical complexity of the selection machinery —
 Fast MaxVol must scale O(K·R²), the projection sweep O(R·d); wall-clock and
-compiled-FLOP scaling are both reported. A third section times every
-registered sampler through the selection engine on identical inputs, so
-strategy overheads are directly comparable."""
+compiled-FLOP scaling are both reported, plus a sweep of every registered
+sampler through the selection engine on identical inputs.
+
+This suite is also the repo's perf gate for the selection hot path:
+
+  * dispatch accounting — the fused Pallas refresh
+    (``kernels/graft_select.py``) must trace to ONE ``pallas_call`` (and no
+    gather), vs 2 ``pallas_call`` + 1 gather for the unfused chain, and the
+    batched variant must keep ONE launch for a whole microbatch stack;
+  * ``sketch_svd`` vs ``svd`` compiled FLOPs at K=1024, M=4096, R=64 — the
+    sketch path must win by ≥ 5×.
+
+Run standalone to emit machine-readable results (tracked across PRs by the
+``perf-smoke`` CI job)::
+
+    PYTHONPATH=src:. python benchmarks/bench_selection_overhead.py \
+        --quick --json BENCH_selection.json
+"""
 from __future__ import annotations
 
-from typing import List
+import argparse
+import json
+import os
+from typing import Any, Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -13,9 +31,20 @@ import numpy as np
 
 from benchmarks.common import csv_row, time_call
 from repro.compat import cost_analysis_dict
+from repro.core.features import sketch_svd_features, svd_features
 from repro.core.maxvol import fast_maxvol
 from repro.core.projection import prefix_projection_errors
+from repro.kernels import ops as kernel_ops
 from repro.selection import GraftConfig, engine, registry
+from repro.selection import graft as graft_lib
+
+_DEFAULT_JSON = os.path.join(os.path.dirname(__file__), "..",
+                             "BENCH_selection.json")
+
+# acceptance configs shared by collect() and the --check gate
+_B = 8                                   # batched-fused microbatch stack
+_KF, _MF, _RF = 1024, 4096, 64           # feature-path FLOPs comparison
+_MIN_FLOPS_RATIO = 5.0                   # sketch_svd must beat svd by this
 
 
 def _flops(fn, *args) -> float:
@@ -23,68 +52,232 @@ def _flops(fn, *args) -> float:
     return cost_analysis_dict(compiled).get("flops", 0.0)
 
 
-def run() -> List[str]:
+def _count_primitives(fn, *args) -> Dict[str, int]:
+    """Primitive counts in the traced jaxpr, recursing into sub-jaxprs
+    (pjit bodies, cond branches, scans) — the dispatch-shape evidence:
+    ``pallas_call`` entries = kernel launches per refresh."""
+    counts: Dict[str, int] = {}
+
+    def subjaxprs(v):
+        if isinstance(v, jax.core.ClosedJaxpr):
+            yield v.jaxpr
+        elif isinstance(v, jax.core.Jaxpr):
+            yield v
+        elif isinstance(v, (list, tuple)):
+            for item in v:
+                yield from subjaxprs(item)
+
+    def walk(jp):
+        for eqn in jp.eqns:
+            counts[eqn.primitive.name] = counts.get(eqn.primitive.name, 0) + 1
+            for v in eqn.params.values():
+                for sub in subjaxprs(v):
+                    walk(sub)
+
+    walk(jax.make_jaxpr(fn)(*args).jaxpr)
+    return counts
+
+
+def _dispatch_entry(counts: Dict[str, int]) -> Dict[str, int]:
+    return {"pallas_call": counts.get("pallas_call", 0),
+            "gather": counts.get("gather", 0)}
+
+
+def collect(quick: bool = False) -> Tuple[List[str], Dict[str, Any]]:
     rng = np.random.default_rng(0)
     rows: List[str] = []
+    report: Dict[str, Any] = {
+        "meta": {"backend": jax.default_backend(), "quick": quick,
+                 "interpret_mode": jax.default_backend() != "tpu"},
+    }
+    repeats = 5 if quick else 20
+    warmup = 1 if quick else 3
 
-    # K scaling at fixed R (expect ~linear)
-    R = 16
-    for K in (128, 256, 512, 1024):
-        V = jnp.asarray(rng.normal(size=(K, R)).astype(np.float32))
-        t = time_call(jax.jit(lambda v: fast_maxvol(v, R)), V)
-        f = _flops(lambda v: fast_maxvol(v, R), V)
-        rows.append(csv_row(f"maxvol_K{K}_R{R}", t, f"flops={f:.3e}"))
+    def timed(fn, *args):
+        return time_call(fn, *args, repeats=repeats, warmup=warmup)
 
-    # R scaling at fixed K (expect ~quadratic)
-    K = 512
-    for R_ in (8, 16, 32, 64):
-        V = jnp.asarray(rng.normal(size=(K, R_)).astype(np.float32))
-        t = time_call(jax.jit(lambda v, r=R_: fast_maxvol(v, r)), V)
-        f = _flops(lambda v, r=R_: fast_maxvol(v, r), V)
-        rows.append(csv_row(f"maxvol_K{K}_R{R_}", t, f"flops={f:.3e}"))
-
-    # projection sweep: d scaling (expect ~linear in d at fixed R)
-    R_ = 32
-    for d in (256, 1024, 4096):
-        G = jnp.asarray(rng.normal(size=(d, R_)).astype(np.float32))
-        g = jnp.asarray(rng.normal(size=(d,)).astype(np.float32))
-        t = time_call(jax.jit(prefix_projection_errors), G, g)
-        f = _flops(prefix_projection_errors, G, g)
-        rows.append(csv_row(f"projsweep_d{d}_R{R_}", t, f"flops={f:.3e}"))
-
-    # every registered sampler through the engine on identical inputs
-    K, d, R_ = 256, 1024, 32
-    cfg = GraftConfig(rset=(8, 16, 32), eps=0.25)
-    V = jnp.asarray(rng.normal(size=(K, R_)).astype(np.float32))
+    # ------------------------------------------------------------------
+    # dispatch accounting: fused refresh vs the unfused 3-op chain
+    # ------------------------------------------------------------------
+    K, d, R = 256, 1024, 32
+    cfg_p = GraftConfig(rset=(8, 16, 32), eps=0.25, use_pallas=True)
+    V = jnp.asarray(rng.normal(size=(K, R)).astype(np.float32))
     G = jnp.asarray(rng.normal(size=(d, K)).astype(np.float32))
     g_bar = jnp.mean(G, axis=1)
+
+    def fused(v, g, gb):
+        return graft_lib.pivot_and_sweep(cfg_p, v, g, gb)
+
+    def unfused(v, g, gb):
+        piv = kernel_ops.fast_maxvol(v, cfg_p.r_max)
+        g_sel = jnp.take(g, piv, axis=1)
+        return piv, kernel_ops.projection_sweep(g_sel, gb), g_sel
+
+    B = _B
+    Vs = jnp.asarray(rng.normal(size=(B, K, R)).astype(np.float32))
+    Gs = jnp.asarray(rng.normal(size=(B, d, K)).astype(np.float32))
+    gbs = jnp.mean(Gs, axis=2)
+
+    def batched_fused(vs, gs, gbss):
+        # the refresh chain for a whole stack (apples-to-apples with
+        # fused/unfused above, which also exclude the rank-decision epilogue)
+        return kernel_ops.fused_graft_select_batched(vs, gs, gbss,
+                                                     cfg_p.r_max)
+
+    report["dispatch_per_refresh"] = {
+        "fused": _dispatch_entry(_count_primitives(fused, V, G, g_bar)),
+        "unfused": _dispatch_entry(_count_primitives(unfused, V, G, g_bar)),
+        f"batched_fused_B{B}": _dispatch_entry(
+            _count_primitives(batched_fused, Vs, Gs, gbs)),
+    }
+    report["refresh_wall_us"] = {
+        "fused": timed(jax.jit(fused), V, G, g_bar),
+        "unfused": timed(jax.jit(unfused), V, G, g_bar),
+    }
+    for name, entry in report["dispatch_per_refresh"].items():
+        rows.append(csv_row(
+            f"dispatch_{name}", 0.0,
+            f"pallas_calls={entry['pallas_call']};gathers={entry['gather']}"))
+
+    # ------------------------------------------------------------------
+    # feature path: sketch_svd vs svd at the acceptance config
+    # ------------------------------------------------------------------
+    Kf, Mf, Rf = _KF, _MF, _RF
+    A = jnp.asarray(rng.normal(size=(Kf, Mf)).astype(np.float32))
+    feats: Dict[str, Any] = {}
+    for name, fn in (("svd", lambda a: svd_features(a, Rf)),
+                     ("sketch_svd", lambda a: sketch_svd_features(a, Rf))):
+        f = _flops(fn, A)
+        t = timed(jax.jit(fn), A)
+        feats[name] = {"flops": f, "wall_us": t}
+        rows.append(csv_row(f"features_{name}_K{Kf}_M{Mf}_R{Rf}", t,
+                            f"flops={f:.3e}"))
+    feats["flops_ratio"] = (feats["svd"]["flops"] /
+                            max(feats["sketch_svd"]["flops"], 1.0))
+    report[f"features_K{Kf}_M{Mf}_R{Rf}"] = feats
+    rows.append(csv_row("features_flops_ratio", 0.0,
+                        f"svd/sketch_svd={feats['flops_ratio']:.2f}"))
+
+    # ------------------------------------------------------------------
+    # scaling: K at fixed R (expect ~linear), R at fixed K (~quadratic),
+    # projection sweep d (~linear)
+    # ------------------------------------------------------------------
+    scaling: List[Dict[str, Any]] = []
+    R_ = 16
+    for K_ in (128, 256, 512, 1024):
+        Vk = jnp.asarray(rng.normal(size=(K_, R_)).astype(np.float32))
+        t = timed(jax.jit(lambda v: fast_maxvol(v, R_)), Vk)
+        f = _flops(lambda v: fast_maxvol(v, R_), Vk)
+        scaling.append({"name": f"maxvol_K{K_}_R{R_}", "wall_us": t,
+                        "flops": f})
+        rows.append(csv_row(f"maxvol_K{K_}_R{R_}", t, f"flops={f:.3e}"))
+
+    K_ = 512
+    for Rv in (8, 16, 32, 64):
+        Vk = jnp.asarray(rng.normal(size=(K_, Rv)).astype(np.float32))
+        t = timed(jax.jit(lambda v, r=Rv: fast_maxvol(v, r)), Vk)
+        f = _flops(lambda v, r=Rv: fast_maxvol(v, r), Vk)
+        scaling.append({"name": f"maxvol_K{K_}_R{Rv}", "wall_us": t,
+                        "flops": f})
+        rows.append(csv_row(f"maxvol_K{K_}_R{Rv}", t, f"flops={f:.3e}"))
+
+    Rv = 32
+    for dv in (256, 1024, 4096):
+        Gd = jnp.asarray(rng.normal(size=(dv, Rv)).astype(np.float32))
+        gd = jnp.asarray(rng.normal(size=(dv,)).astype(np.float32))
+        t = timed(jax.jit(prefix_projection_errors), Gd, gd)
+        f = _flops(prefix_projection_errors, Gd, gd)
+        scaling.append({"name": f"projsweep_d{dv}_R{Rv}", "wall_us": t,
+                        "flops": f})
+        rows.append(csv_row(f"projsweep_d{dv}_R{Rv}", t, f"flops={f:.3e}"))
+    report["scaling"] = scaling
+
+    # ------------------------------------------------------------------
+    # every registered sampler through the engine on identical inputs
+    # ------------------------------------------------------------------
+    K, dv, Rv = 256, 1024, 32
+    cfg = GraftConfig(rset=(8, 16, 32), eps=0.25)
+    V = jnp.asarray(rng.normal(size=(K, Rv)).astype(np.float32))
+    G = jnp.asarray(rng.normal(size=(dv, K)).astype(np.float32))
+    g_bar = jnp.mean(G, axis=1)
     scores = jnp.asarray(rng.random(K).astype(np.float32))
+    samplers: Dict[str, float] = {}
     for name in registry.available():
         def call(v, g, gb, sc, n=name):
             return engine.select_batch(cfg, n, v, g, gb, scores=sc)
-        t = time_call(call, V, G, g_bar, scores)
-        rows.append(csv_row(f"sampler_{name}_K{K}_d{d}", t, "registry-engine"))
+        t = timed(call, V, G, g_bar, scores)
+        samplers[name] = t
+        rows.append(csv_row(f"sampler_{name}_K{K}_d{dv}", t, "registry-engine"))
+    report["samplers_wall_us"] = samplers
 
     # derived scaling exponents (log-log slope)
-    def slope(names, var_vals):
-        ts = []
-        for n in names:
-            for r in rows:
-                if r.startswith(n + ","):
-                    ts.append(float(r.split(",")[1]))
-                    break                      # first match (names can repeat)
-        ts = np.asarray(ts)
+    def slope(prefixes, var_vals):
+        ts = [next(e["wall_us"] for e in scaling if e["name"] == p)
+              for p in prefixes]
         return float(np.polyfit(np.log(var_vals), np.log(ts), 1)[0])
 
     k_slope = slope([f"maxvol_K{k}_R16" for k in (128, 256, 512, 1024)],
                     np.asarray([128, 256, 512, 1024]))
     r_slope = slope([f"maxvol_K512_R{r}" for r in (8, 16, 32, 64)],
                     np.asarray([8, 16, 32, 64]))
+    report["scaling_exponents"] = {"K_slope": k_slope, "R_slope": r_slope}
     rows.append(csv_row("maxvol_scaling_exponents", 0.0,
                         f"K_slope={k_slope:.2f};R_slope={r_slope:.2f}"))
+    return rows, report
+
+
+def run() -> List[str]:
+    rows, _ = collect()
     return rows
 
 
-if __name__ == "__main__":
-    for r in run():
+def check(report: Dict[str, Any]) -> List[str]:
+    """The perf gate: dispatch shape and FLOPs wins that must not regress.
+    Returns a list of violations (empty = pass)."""
+    problems: List[str] = []
+    disp = report["dispatch_per_refresh"]
+    if disp["fused"] != {"pallas_call": 1, "gather": 0}:
+        problems.append(f"fused refresh is not 1 pallas_call / 0 gathers: "
+                        f"{disp['fused']}")
+    if disp[f"batched_fused_B{_B}"]["pallas_call"] != 1:
+        problems.append(f"batched fused refresh is not ONE launch: "
+                        f"{disp[f'batched_fused_B{_B}']}")
+    ratio = report[f"features_K{_KF}_M{_MF}_R{_RF}"]["flops_ratio"]
+    if ratio < _MIN_FLOPS_RATIO:
+        problems.append(f"sketch_svd FLOPs win {ratio:.2f}x < "
+                        f"{_MIN_FLOPS_RATIO}x vs svd")
+    return problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer timing repeats (CI smoke mode)")
+    ap.add_argument("--json", nargs="?", const=_DEFAULT_JSON, default=None,
+                    help="write the machine-readable report "
+                         "(default: BENCH_selection.json at the repo root)")
+    ap.add_argument("--check", action="store_true",
+                    help="exit non-zero if the perf gate regresses (fused "
+                         "refresh != 1 pallas_call, batched != 1 launch, "
+                         f"or sketch_svd FLOPs win < {_MIN_FLOPS_RATIO}x)")
+    args = ap.parse_args(argv)
+    rows, report = collect(quick=args.quick)
+    for r in rows:
         print(r)
+    if args.json:
+        path = os.path.abspath(args.json)
+        with open(path, "w") as f:
+            json.dump(report, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"# wrote {path}")
+    if args.check:
+        problems = check(report)
+        for p in problems:
+            print(f"# PERF GATE FAILED: {p}")
+        return 1 if problems else 0
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

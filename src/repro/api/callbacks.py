@@ -97,11 +97,14 @@ class EvalCallback(Callback):
 
 class MetricsCallback(Callback):
     """JSONL telemetry stream + throughput/MFU tracking. Runs after eval so
-    held-out numbers reach the stream (one row per step)."""
+    held-out numbers reach the stream (one row per step). Rows are buffered
+    by the logger and flushed every ``flush_every`` steps and on close, so
+    ``on_step_end`` does not pay a host write syscall per step."""
     priority = 30
 
-    def __init__(self, path: Optional[str] = None):
+    def __init__(self, path: Optional[str] = None, flush_every: int = 20):
         self.path = path
+        self.flush_every = flush_every
         self.logger: Optional[MetricsLogger] = None
 
     def on_train_start(self, trainer) -> None:
@@ -110,7 +113,8 @@ class MetricsCallback(Callback):
             self.path, num_chips=len(jax.devices()),
             flops_per_step=train_step_flops(
                 trainer.num_params, tr.batch * tr.seq,
-                remat=trainer.mcfg.remat != "none"))
+                remat=trainer.mcfg.remat != "none"),
+            flush_every=self.flush_every)
 
     def on_step_end(self, trainer, step, metrics) -> None:
         tr = trainer.config.train

@@ -203,6 +203,10 @@ class ExperimentConfig:
         d = self.finalized().to_dict()
         for f in _NONSEMANTIC_TRAIN_FIELDS:
             d["train"].pop(f, None)
+        if d.get("graft"):
+            # dispatch-schedule knobs: the overlapped and sequential paths
+            # produce the same trajectory (tested), so they share a hash
+            d["graft"].pop("overlap", None)
         blob = json.dumps(d, sort_keys=True).encode()
         return hashlib.sha256(blob).hexdigest()[:12]
 

@@ -94,8 +94,17 @@ class Trainer:
         tr = cfg.train
         self.mcfg, self.tcfg, self.data = cfg.build()
         mesh = make_host_mesh()
-        step_fn = steps_lib.make_train_step(self.mcfg, self.tcfg)
-        jitted = jax.jit(step_fn, donate_argnums=(0,))
+        if self.tcfg.use_graft and self.tcfg.graft.overlap:
+            # refresh and train step as separate dispatches: the selection
+            # forward pipelines with the train stream (same trajectory)
+            from repro.selection.overlap import OverlappedSelector
+            run_step = OverlappedSelector(self.mcfg, self.tcfg).step
+        else:
+            step_fn = steps_lib.make_train_step(self.mcfg, self.tcfg)
+            jitted = jax.jit(step_fn, donate_argnums=(0,))
+
+            def run_step(state, batch, step):
+                return jitted(state, batch)
 
         history = []
         with sh.sharding_rules(mesh):
@@ -114,7 +123,7 @@ class Trainer:
                 batch_np = next(it)
                 batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
                 t0 = time.time()
-                self.state, metrics = jitted(self.state, batch)
+                self.state, metrics = run_step(self.state, batch, step)
                 metrics = {k: float(v) for k, v in metrics.items()}
                 self.last_step_time = time.time() - t0
                 self._fire("on_step_end", step, metrics)

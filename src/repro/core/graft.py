@@ -8,9 +8,9 @@ data-parallel paths. Existing imports keep working; new code should import
 from ``repro.selection``.
 """
 from repro.selection.base import GraftConfig, SelectionState, init_state
-from repro.selection.graft import (GraftState, _maxvol, _prefix_errors,  # noqa: F401
-                                   graft_select, maybe_refresh,
-                                   select_from_batch)
+from repro.selection.graft import (GraftState, graft_select,  # noqa: F401
+                                   graft_select_batched, maybe_refresh,
+                                   pivot_and_sweep, select_from_batch)
 
 __all__ = ["GraftConfig", "GraftState", "SelectionState", "init_state",
            "graft_select", "maybe_refresh", "select_from_batch"]

@@ -19,14 +19,8 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-_PIVOT_EPS = 1e-12
-
-
-def _safe_pivot(x: jax.Array) -> jax.Array:
-    """Guard a pivot value away from exact zero (degenerate column)."""
-    mag = jnp.abs(x)
-    sign = jnp.where(x >= 0, 1.0, -1.0)
-    return jnp.where(mag < _PIVOT_EPS, sign * _PIVOT_EPS, x)
+from repro.core.numerics import PIVOT_EPS as _PIVOT_EPS
+from repro.core.numerics import safe_pivot as _safe_pivot
 
 
 @functools.partial(jax.jit, static_argnames=("rank",))

@@ -1,0 +1,22 @@
+"""Shared numerical guards for the MaxVol family.
+
+One definition of the degenerate-pivot guard, used by the jnp reference
+(``core/maxvol.py``) and every Pallas kernel (``kernels/fast_maxvol.py``,
+``kernels/graft_select.py``) — the pivot tie-break under rank deficiency
+must be bit-identical across all implementations or the parity tests (and
+the paper's prefix-consistency property) break.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# magnitude below which a pivot counts as a degenerate (eliminated) column
+PIVOT_EPS = 1e-12
+
+
+def safe_pivot(x: jax.Array) -> jax.Array:
+    """Guard a pivot value away from exact zero, preserving its sign."""
+    mag = jnp.abs(x)
+    sign = jnp.where(x >= 0, 1.0, -1.0)
+    return jnp.where(mag < PIVOT_EPS, sign * PIVOT_EPS, x)

@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-_PIVOT_EPS = 1e-12
+from repro.core.numerics import safe_pivot
 
 
 def _fast_maxvol_kernel(v_ref, pivots_ref, logvol_ref, *, rank: int):
@@ -38,10 +38,7 @@ def _fast_maxvol_kernel(v_ref, pivots_ref, logvol_ref, *, rank: int):
         col = W[:, j]
         scores = jnp.where(avail > 0, jnp.abs(col), -1.0)
         pj = jnp.argmax(scores)
-        pivot_val = W[pj, j]
-        mag = jnp.abs(pivot_val)
-        sign = jnp.where(pivot_val >= 0, 1.0, -1.0)
-        pivot_val = jnp.where(mag < _PIVOT_EPS, sign * _PIVOT_EPS, pivot_val)
+        pivot_val = safe_pivot(W[pj, j])
         factor = col / pivot_val                       # (K,)
         pivot_row = W[pj, :]                           # (R,)
         W_new = W - factor[:, None] * pivot_row[None, :]

@@ -1,0 +1,204 @@
+"""Fused Pallas kernel for one whole GRAFT selection refresh (paper §3.1-3.2).
+
+The unfused path is three device dispatches with an HBM round-trip between
+each: ``fast_maxvol`` (pivots) → ``jnp.take`` (gather the pivot columns of
+G) → ``projection_sweep`` (prefix errors). Here all three run in a single
+``pallas_call`` with ``V (K, R)`` and ``G (d, K)`` resident in VMEM for the
+whole refresh:
+
+  1. Fast MaxVol pivot loop on V — identical control flow to
+     ``kernels/fast_maxvol.py`` (same ``safe_pivot`` guard, same tie-break),
+     so pivots are bit-identical to the unfused kernel.
+  2. Column gather ``G_sel = G @ onehot(pivots)`` — a one-hot matmul rather
+     than a dynamic gather: exact (one 1.0 per column) and MXU-friendly.
+  3. MGS prefix projection-error sweep over ``G_sel`` against ``ḡ`` —
+     identical arithmetic to ``kernels/projection_sweep.py``.
+
+Two variants share one body:
+
+  * ``fused_graft_select_pallas``          — ``grid=()``, one (K, R) batch.
+  * ``fused_graft_select_batched_pallas``  — ``grid=(B,)``, a whole
+    microbatch stack in ONE kernel launch (each grid step owns one batch's
+    VMEM blocks). This is what ``engine.select_multi_batch`` dispatches
+    instead of vmapping the ``grid=()`` kernel, which Mosaic cannot lower.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.numerics import safe_pivot
+
+# MGS guard — must match kernels/projection_sweep.py for bit-identical errors
+_EPS = 1e-12
+
+# single-core VMEM budget for all resident blocks (f32 words, bytes)
+_VMEM_BUDGET_BYTES = 12 * 1024 * 1024
+
+
+def _fused_body(V, G, g_bar, rank: int):
+    """The whole refresh on loaded VMEM values.
+
+    V: (K, R) f32; G: (d, K) f32; g_bar: (d,) f32. Returns
+    (pivots (rank,) i32, errors (rank,) f32, logvol () f32,
+    G_sel (d, rank) f32).
+    """
+    K = V.shape[0]
+
+    # --- stage 1: Fast MaxVol (same arithmetic as _fast_maxvol_kernel) ---
+    def mv_body(j, carry):
+        W, avail, pivots, logvol = carry
+        col = W[:, j]
+        scores = jnp.where(avail > 0, jnp.abs(col), -1.0)
+        pj = jnp.argmax(scores)
+        pivot_val = safe_pivot(W[pj, j])
+        factor = col / pivot_val                        # (K,)
+        pivot_row = W[pj, :]                            # (R,)
+        W_new = W - factor[:, None] * pivot_row[None, :]
+        W_new = jnp.where((jax.lax.iota(jnp.int32, K) == pj)[:, None], W, W_new)
+        avail = jnp.where(jax.lax.iota(jnp.int32, K) == pj, 0.0, avail)
+        pivots = pivots.at[j].set(pj.astype(jnp.int32))
+        return W_new, avail, pivots, logvol + jnp.log(jnp.abs(pivot_val))
+
+    _, _, pivots, logvol = jax.lax.fori_loop(
+        0, rank, mv_body,
+        (V, jnp.ones((K,), jnp.float32),
+         jnp.zeros((rank,), jnp.int32), jnp.float32(0.0)))
+
+    # --- stage 2: gather the pivot columns of G as a one-hot matmul ---
+    onehot = (jax.lax.broadcasted_iota(jnp.int32, (K, rank), 0)
+              == pivots[None, :]).astype(jnp.float32)
+    G_sel = G @ onehot                                  # (d, rank), exact
+
+    # --- stage 3: MGS prefix sweep (same arithmetic as _projection_sweep_kernel) ---
+    g_hat = g_bar / jnp.sqrt(jnp.sum(g_bar * g_bar) + _EPS)
+
+    def mgs_body(j, carry):
+        Q, captured, errs = carry                       # Q: (d, rank)
+        q = G_sel[:, j]
+        q = q - Q @ (Q.T @ q)
+        q = q - Q @ (Q.T @ q)
+        nrm = jnp.sqrt(jnp.sum(q * q))
+        q = jnp.where(nrm > 1e-8, q / (nrm + _EPS), jnp.zeros_like(q))
+        Q = jnp.where((jax.lax.iota(jnp.int32, rank) == j)[None, :],
+                      q[:, None], Q)
+        captured = captured + jnp.sum(q * g_hat) ** 2
+        errs = errs.at[j].set(jnp.clip(1.0 - captured, 0.0, 1.0))
+        return Q, captured, errs
+
+    d = G.shape[0]
+    _, _, errors = jax.lax.fori_loop(
+        0, rank, mgs_body,
+        (jnp.zeros((d, rank), jnp.float32), jnp.float32(0.0),
+         jnp.zeros((rank,), jnp.float32)))
+    return pivots, errors, logvol, G_sel
+
+
+def _fused_kernel(v_ref, g_ref, gbar_ref,
+                  piv_ref, err_ref, logvol_ref, gsel_ref, *, rank: int):
+    pivots, errors, logvol, G_sel = _fused_body(
+        v_ref[...], g_ref[...], gbar_ref[...], rank)
+    piv_ref[...] = pivots
+    err_ref[...] = errors
+    logvol_ref[0] = logvol
+    gsel_ref[...] = G_sel
+
+
+def _fused_kernel_batched(v_ref, g_ref, gbar_ref,
+                          piv_ref, err_ref, logvol_ref, gsel_ref, *,
+                          rank: int):
+    # every ref carries a leading block dim of 1 (one grid step = one batch)
+    pivots, errors, logvol, G_sel = _fused_body(
+        v_ref[0], g_ref[0], gbar_ref[0], rank)
+    piv_ref[0] = pivots
+    err_ref[0] = errors
+    logvol_ref[0, 0] = logvol
+    gsel_ref[0] = G_sel
+
+
+def _check_budget(K: int, R: int, d: int, rank: int) -> None:
+    # resident f32 blocks: V, G, G_sel, the MGS basis Q, and the one-hot
+    words = K * R + d * K + 2 * d * rank + K * rank
+    if words * 4 > _VMEM_BUDGET_BYTES:
+        raise ValueError(
+            f"fused selection blocks ({words * 4 / 2**20:.1f} MB) exceed the "
+            f"VMEM budget; shrink K={K}, d={d} or rank={rank}")
+
+
+@functools.partial(jax.jit, static_argnames=("rank", "interpret"))
+def fused_graft_select_pallas(V: jax.Array, G: jax.Array, g_bar: jax.Array,
+                              rank: int, interpret: bool = False):
+    """One refresh, one dispatch. V: (K, R); G: (d, K); g_bar: (d,).
+
+    Returns ``(pivots (rank,), errors (rank,), logvol (), G_sel (d, rank))``
+    — pivots bit-identical to ``fast_maxvol_pallas``, errors bit-identical
+    to ``projection_sweep_pallas`` on the gathered columns.
+    """
+    K, R = V.shape
+    d, Kg = G.shape
+    if Kg != K:
+        raise ValueError(f"V rows {K} != G columns {Kg}")
+    if g_bar.shape != (d,):
+        raise ValueError(f"g_bar shape {g_bar.shape} != ({d},)")
+    if rank > min(K, R):
+        raise ValueError(f"rank {rank} > min{V.shape}")
+    _check_budget(K, R, d, rank)
+    kernel = functools.partial(_fused_kernel, rank=rank)
+    pivots, errors, logvol, gsel = pl.pallas_call(
+        kernel,
+        out_shape=(jax.ShapeDtypeStruct((rank,), jnp.int32),
+                   jax.ShapeDtypeStruct((rank,), jnp.float32),
+                   jax.ShapeDtypeStruct((1,), jnp.float32),
+                   jax.ShapeDtypeStruct((d, rank), jnp.float32)),
+        in_specs=[pl.BlockSpec((K, R), lambda: (0, 0)),
+                  pl.BlockSpec((d, K), lambda: (0, 0)),
+                  pl.BlockSpec((d,), lambda: (0,))],
+        out_specs=(pl.BlockSpec((rank,), lambda: (0,)),
+                   pl.BlockSpec((rank,), lambda: (0,)),
+                   pl.BlockSpec((1,), lambda: (0,)),
+                   pl.BlockSpec((d, rank), lambda: (0, 0))),
+        grid=(),
+        interpret=interpret,
+    )(V.astype(jnp.float32), G.astype(jnp.float32), g_bar.astype(jnp.float32))
+    return pivots, errors, logvol[0], gsel
+
+
+@functools.partial(jax.jit, static_argnames=("rank", "interpret"))
+def fused_graft_select_batched_pallas(V: jax.Array, G: jax.Array,
+                                      g_bar: jax.Array, rank: int,
+                                      interpret: bool = False):
+    """A whole microbatch stack in ONE launch (``grid=(B,)``).
+
+    V: (B, K, R); G: (B, d, K); g_bar: (B, d). Returns per-batch
+    ``(pivots (B, rank), errors (B, rank), logvol (B,), G_sel (B, d, rank))``
+    — row ``b`` identical to ``fused_graft_select_pallas`` on batch ``b``.
+    """
+    B, K, R = V.shape
+    _, d, Kg = G.shape
+    if G.shape[0] != B or g_bar.shape != (B, d) or Kg != K:
+        raise ValueError(f"inconsistent batch shapes V={V.shape} G={G.shape} "
+                         f"g_bar={g_bar.shape}")
+    if rank > min(K, R):
+        raise ValueError(f"rank {rank} > min({K}, {R})")
+    _check_budget(K, R, d, rank)
+    kernel = functools.partial(_fused_kernel_batched, rank=rank)
+    pivots, errors, logvol, gsel = pl.pallas_call(
+        kernel,
+        out_shape=(jax.ShapeDtypeStruct((B, rank), jnp.int32),
+                   jax.ShapeDtypeStruct((B, rank), jnp.float32),
+                   jax.ShapeDtypeStruct((B, 1), jnp.float32),
+                   jax.ShapeDtypeStruct((B, d, rank), jnp.float32)),
+        in_specs=[pl.BlockSpec((1, K, R), lambda b: (b, 0, 0)),
+                  pl.BlockSpec((1, d, K), lambda b: (b, 0, 0)),
+                  pl.BlockSpec((1, d), lambda b: (b, 0))],
+        out_specs=(pl.BlockSpec((1, rank), lambda b: (b, 0)),
+                   pl.BlockSpec((1, rank), lambda b: (b, 0)),
+                   pl.BlockSpec((1, 1), lambda b: (b, 0)),
+                   pl.BlockSpec((1, d, rank), lambda b: (b, 0, 0))),
+        grid=(B,),
+        interpret=interpret,
+    )(V.astype(jnp.float32), G.astype(jnp.float32), g_bar.astype(jnp.float32))
+    return pivots, errors, logvol[:, 0], gsel

@@ -10,6 +10,7 @@ from __future__ import annotations
 import jax
 
 from repro.kernels import fast_maxvol as _fm
+from repro.kernels import graft_select as _gs
 from repro.kernels import projection_sweep as _ps
 from repro.kernels import rwkv_scan as _rw
 
@@ -31,6 +32,24 @@ def fast_maxvol_with_logvol(V: jax.Array, rank: int):
 def projection_sweep(G: jax.Array, g_bar: jax.Array) -> jax.Array:
     """Prefix projection errors (R,) — Pallas MGS sweep."""
     return _ps.projection_sweep_pallas(G, g_bar, interpret=not _on_tpu())
+
+
+def fused_graft_select(V: jax.Array, G: jax.Array, g_bar: jax.Array,
+                       rank: int):
+    """One GRAFT refresh (MaxVol + gather + MGS sweep) in ONE dispatch.
+    Returns (pivots (rank,), errors (rank,), G_sel (d, rank))."""
+    pivots, errors, _, gsel = _gs.fused_graft_select_pallas(
+        V, G, g_bar, rank, interpret=not _on_tpu())
+    return pivots, errors, gsel
+
+
+def fused_graft_select_batched(V: jax.Array, G: jax.Array, g_bar: jax.Array,
+                               rank: int):
+    """A microbatch stack of refreshes in ONE grid=(B,) launch. Returns
+    (pivots (B, rank), errors (B, rank), G_sel (B, d, rank))."""
+    pivots, errors, _, gsel = _gs.fused_graft_select_batched_pallas(
+        V, G, g_bar, rank, interpret=not _on_tpu())
+    return pivots, errors, gsel
 
 
 def rwkv_scan(r, k, v, w, u, chunk: int = 32) -> jax.Array:

@@ -1,8 +1,16 @@
 """Training telemetry: JSONL metrics stream + throughput/MFU tracking.
 
-Production habits kept: append-only JSONL (crash-safe, greppable), host-side
-only (no device sync beyond the metrics already materialized by the step),
-analytic FLOPs/step so MFU is reported against the 197 TFLOP/s bf16 peak.
+Production habits kept: append-only JSONL (greppable), host-side only (no
+device sync beyond the metrics already materialized by the step), analytic
+FLOPs/step so MFU is reported against the 197 TFLOP/s bf16 peak.
+
+Rows are BUFFERED: one logical row per step, but the host write syscall
+happens only every ``flush_every`` rows (and on ``flush``/``close``), so at
+production step times the telemetry stream never stalls the step loop on
+file I/O. The trade: crash-safety is BOUNDED, not per-row — a hard kill
+between flushes drops at most the last ``flush_every − 1`` rows (a clean
+stop, including preemption via ``EmergencySaver``, drains the buffer through
+``close``). Set ``flush_every=1`` to restore per-row durability.
 """
 from __future__ import annotations
 
@@ -23,11 +31,14 @@ def train_step_flops(num_params: int, tokens_per_step: int,
 
 class MetricsLogger:
     def __init__(self, path: Optional[str] = None, num_chips: int = 1,
-                 flops_per_step: Optional[float] = None):
+                 flops_per_step: Optional[float] = None,
+                 flush_every: int = 20):
         self.path = path
         self.num_chips = num_chips
         self.flops_per_step = flops_per_step
-        self._f = open(path, "a", buffering=1) if path else None
+        self.flush_every = max(1, flush_every)
+        self._f = open(path, "a") if path else None
+        self._buf: list = []
         self._last_t: Optional[float] = None
         self.tokens_seen = 0
 
@@ -49,11 +60,22 @@ class MetricsLogger:
                               (dt * self.num_chips * PEAK_FLOPS_PER_CHIP))
         self._last_t = now
         if self._f:
-            self._f.write(json.dumps(row) + "\n")
+            self._buf.append(json.dumps(row))
+            if len(self._buf) >= self.flush_every:
+                self.flush()
         return row
+
+    def flush(self):
+        """Drain the row buffer to disk (called automatically every
+        ``flush_every`` rows and on ``close``)."""
+        if self._f and self._buf:
+            self._f.write("\n".join(self._buf) + "\n")
+            self._f.flush()
+            self._buf.clear()
 
     def close(self):
         if self._f:
+            self.flush()
             self._f.close()
 
 

@@ -144,6 +144,27 @@ def selection_inputs(mcfg, tcfg: TrainConfig, params, batch
     return V, G, g_bar, scores
 
 
+def make_selection_refresh(mcfg, tcfg: TrainConfig):
+    """``(params, batch, step) → SelectionState``: the selection forward
+    alone — features + grad embeddings + the registry sampler's decision.
+
+    ``graft_train_step`` inlines this under its refresh ``lax.cond``; the
+    ``OverlappedSelector`` (``repro.selection.overlap``) jits it as its OWN
+    dispatch so the refresh pipelines against the train-step stream instead
+    of serializing inside it.
+    """
+    smp = sampler_registry.get_sampler(tcfg.sampler)
+    gcfg = tcfg.graft
+
+    def refresh(params, batch, step):
+        V, G, g_bar, scores = selection_inputs(mcfg, tcfg, params, batch)
+        key = selection_base.default_select_key(step)
+        return smp.select(gcfg, selection_base.SelectionInputs(
+            V, G, g_bar, scores, key), step)
+
+    return refresh
+
+
 def _take_batch(batch, pivots: jax.Array, k_global: int):
     def take(x):
         if hasattr(x, "shape") and x.ndim >= 1 and x.shape[0] == k_global:
@@ -186,15 +207,12 @@ def graft_train_step(mcfg, tcfg: TrainConfig, state, batch):
     """Alg. 1 as one jitted step, sampler-generic: the subset strategy is
     resolved from the registry by ``tcfg.sampler`` (default: GRAFT)."""
     gcfg = tcfg.graft
-    smp = sampler_registry.get_sampler(tcfg.sampler)
+    refresh = make_selection_refresh(mcfg, tcfg)
     opt = make_optimizer(tcfg.optimizer)
     k_global = jax.tree_util.tree_leaves(batch)[0].shape[0]
 
     def do_select(_):
-        V, G, g_bar, scores = selection_inputs(mcfg, tcfg, state["params"], batch)
-        key = selection_base.default_select_key(state["step"])
-        return smp.select(gcfg, selection_base.SelectionInputs(
-            V, G, g_bar, scores, key), state["step"])
+        return refresh(state["params"], batch, state["step"])
 
     if gcfg.refresh_every == 1:
         graft_state = do_select(None)
@@ -249,11 +267,8 @@ def subset_train_step(mcfg, tcfg: TrainConfig, state, batch):
 def selection_step(mcfg, tcfg: TrainConfig, state, batch):
     """Selection only (features + grad embeddings + MaxVol + rank sweep) —
     isolates the refresh cost for the amortization analysis (§Perf)."""
-    smp = sampler_registry.get_sampler(tcfg.sampler)
-    V, G, g_bar, scores = selection_inputs(mcfg, tcfg, state["params"], batch)
-    key = selection_base.default_select_key(state["step"])
-    graft_state = smp.select(tcfg.graft, selection_base.SelectionInputs(
-        V, G, g_bar, scores, key), state["step"])
+    refresh = make_selection_refresh(mcfg, tcfg)
+    graft_state = refresh(state["params"], batch, state["step"])
     new_state = dict(state, graft=graft_state)
     return new_state, {"rank": graft_state.rank,
                        "proj_error": graft_state.last_error}

@@ -25,8 +25,10 @@ from repro.selection.base import (GraftConfig, Sampler, SamplerConfig,
                                   SelectionInputs, SelectionState, init_state)
 from repro.selection.engine import (make_sharded_selector, select_batch,
                                     select_multi_batch, select_sharded)
-from repro.selection.graft import (GraftState, graft_select, maybe_refresh,
+from repro.selection.graft import (GraftState, graft_select,
+                                   graft_select_batched, maybe_refresh,
                                    select_from_batch)
+from repro.selection.overlap import OverlappedSelector
 from repro.selection.registry import available, get_sampler, register
 from repro.selection.sources import (FeatureExtractor, GradSource,
                                      GradSourceInputs, available_features,
@@ -37,9 +39,10 @@ from repro.selection.sources import (FeatureExtractor, GradSource,
 __all__ = [
     "GraftConfig", "SamplerConfig", "Sampler", "SelectionInputs",
     "SelectionState", "GraftState", "init_state",
-    "graft_select", "maybe_refresh", "select_from_batch",
+    "graft_select", "graft_select_batched", "maybe_refresh",
+    "select_from_batch",
     "select_batch", "select_multi_batch", "select_sharded",
-    "make_sharded_selector",
+    "make_sharded_selector", "OverlappedSelector",
     "available", "get_sampler", "register",
     "sources", "FeatureExtractor", "GradSource", "GradSourceInputs",
     "resolve_features", "resolve_grad_source", "register_features",

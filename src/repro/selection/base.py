@@ -22,10 +22,16 @@ class GraftConfig:
     rset: Tuple[int, ...] = (8, 16, 32, 64)   # candidate ranks, ascending
     eps: float = 0.25                          # projection-error threshold
     refresh_every: int = 20                    # S in the paper (20–50)
-    feature_mode: str = "svd"                 # svd | pca_sketch | pooled_raw
+    feature_mode: str = "svd"                 # svd | sketch_svd | pca_sketch
+                                              #   | pooled_raw
     grad_mode: str = "probe"                  # probe | logit_embed
                                               # (registries: selection/sources.py)
     use_pallas: bool = False                   # TPU kernels vs jnp reference
+    overlap: bool = False                      # double-buffered refresh/train
+                                              # overlap (selection/overlap.py);
+                                              # dispatch schedule only — same
+                                              # trajectory, excluded from
+                                              # config_hash
 
     def __post_init__(self):
         if tuple(sorted(self.rset)) != tuple(self.rset):

@@ -82,6 +82,13 @@ def select_batch(cfg: GraftConfig, sampler: SamplerLike, V: jax.Array,
 
 @functools.lru_cache(maxsize=64)
 def _multi_batch_compiled(cfg: GraftConfig, smp: Sampler):
+    if cfg.use_pallas and smp.fn is graft_lib.graft_sampler_fn:
+        # vmap over a grid=() pallas_call has no Mosaic lowering — the GRAFT
+        # fast path dispatches the whole stack as ONE grid=(B,) fused launch
+        def fn(V, G, g_bar, scores, keys, step):
+            return graft_lib.graft_select_batched(cfg, V, G, g_bar, step)
+        return jax.jit(fn)
+
     def fn(V, G, g_bar, scores, keys, step):
         def one(v, g, gb, sc, k):
             return smp.fn(cfg, SelectionInputs(v, g, gb, sc, k), step)
@@ -157,11 +164,13 @@ def _sharded_selector_cached(cfg: GraftConfig, mesh: Mesh,
 
     def shard_fn(V_s, G_s, step):
         K_local = V_s.shape[0]
-        pivots = graft_lib._maxvol(V_s, r_max, cfg.use_pallas)      # (R_max,)
-        G_sel = jnp.take(G_s, pivots, axis=1)                       # (d, R_max)
         g_bar = jax.lax.pmean(jnp.mean(G_s, axis=1), axes)          # global ḡ
-        errors = jax.lax.pmean(
-            graft_lib._prefix_errors(G_sel, g_bar, cfg.use_pallas), axes)
+        # local refresh: ONE fused Pallas dispatch under cfg.use_pallas,
+        # else the jnp chain — then the error statistics are pmean'd so the
+        # rank decision R* is identical on every shard
+        pivots, local_errors, G_sel = graft_lib.pivot_and_sweep(
+            cfg, V_s, G_s, g_bar)
+        errors = jax.lax.pmean(local_errors, axes)
         rank, err = proj_lib.select_rank(errors, cfg.rset, cfg.eps)
         active = (jnp.arange(r_max) < rank).astype(jnp.float32)
         weights = active / jnp.maximum(n_shards * jnp.sum(active), 1.0)

@@ -30,19 +30,35 @@ from repro.selection.base import GraftConfig, SelectionInputs, SelectionState, i
 GraftState = SelectionState
 
 
-def _maxvol(V: jax.Array, rank: int, use_pallas: bool) -> jax.Array:
-    if use_pallas:
+def pivot_and_sweep(cfg: GraftConfig, V: jax.Array, G: jax.Array,
+                    g_bar: jax.Array):
+    """Stages 2-4 of the refresh: ``(pivots, prefix errors, G_sel)``.
+
+    With ``cfg.use_pallas`` this is ONE fused Pallas dispatch
+    (``kernels/graft_select.py``: MaxVol + gather + MGS sweep, everything
+    VMEM-resident); otherwise the jnp three-op reference chain.
+    """
+    if cfg.use_pallas:
         from repro.kernels import ops as kernel_ops
-        return kernel_ops.fast_maxvol(V, rank)
-    pivots, _ = maxvol_lib.fast_maxvol(V, rank)
-    return pivots
+        return kernel_ops.fused_graft_select(V, G, g_bar, cfg.r_max)
+    pivots, _ = maxvol_lib.fast_maxvol(V, cfg.r_max)
+    G_sel = jnp.take(G, pivots, axis=1)                    # (d, R_max)
+    errors = proj_lib.prefix_projection_errors(G_sel, g_bar)
+    return pivots, errors, G_sel
 
 
-def _prefix_errors(G: jax.Array, g_bar: jax.Array, use_pallas: bool) -> jax.Array:
-    if use_pallas:
-        from repro.kernels import ops as kernel_ops
-        return kernel_ops.projection_sweep(G, g_bar)
-    return proj_lib.prefix_projection_errors(G, g_bar)
+def _finalize(cfg: GraftConfig, pivots: jax.Array, errors: jax.Array,
+              G_sel: jax.Array, g_bar: jax.Array,
+              step: jax.Array) -> SelectionState:
+    """Rank decision + weights + diagnostics — the cheap jnp epilogue shared
+    by the single, batched and sharded refresh paths."""
+    rank, err = proj_lib.select_rank(errors, cfg.rset, cfg.eps)
+    active = (jnp.arange(cfg.r_max) < rank).astype(jnp.float32)
+    weights = active / jnp.maximum(jnp.sum(active), 1.0)
+    g_sub = G_sel @ weights                                # subset mean gradient
+    align = proj_lib.cosine_alignment(g_sub, g_bar)
+    return SelectionState(pivots=pivots, weights=weights, rank=rank,
+                          last_error=err, alignment=align, step=step)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
@@ -50,18 +66,26 @@ def graft_select(cfg: GraftConfig, V: jax.Array, G: jax.Array,
                  g_bar: jax.Array, step: jax.Array) -> SelectionState:
     """One selection refresh. V: (K, R_max) features (relevance-ordered);
     G: (d, K) per-sample grad embeddings; ḡ: (d,). Returns new state."""
-    r_max = cfg.r_max
-    pivots = _maxvol(V, r_max, cfg.use_pallas)             # (R_max,)
-    G_sel = jnp.take(G, pivots, axis=1)                    # (d, R_max), pivot order
-    errors = _prefix_errors(G_sel, g_bar, cfg.use_pallas)  # (R_max,)
-    rank, err = proj_lib.select_rank(errors, cfg.rset, cfg.eps)
+    pivots, errors, G_sel = pivot_and_sweep(cfg, V, G, g_bar)
+    return _finalize(cfg, pivots, errors, G_sel, g_bar, step)
 
-    active = (jnp.arange(r_max) < rank).astype(jnp.float32)
-    weights = active / jnp.maximum(jnp.sum(active), 1.0)
-    g_sub = G_sel @ weights                                # subset mean gradient
-    align = proj_lib.cosine_alignment(g_sub, g_bar)
-    return SelectionState(pivots=pivots, weights=weights, rank=rank,
-                          last_error=err, alignment=align, step=step)
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def graft_select_batched(cfg: GraftConfig, V: jax.Array, G: jax.Array,
+                         g_bar: jax.Array, step: jax.Array) -> SelectionState:
+    """A whole microbatch stack of refreshes: V (B, K, R_max), G (B, d, K),
+    ḡ (B, d). Semantically ``vmap(graft_select)`` — but with
+    ``cfg.use_pallas`` the stack runs as ONE ``grid=(B,)`` kernel launch
+    (vmap cannot lower a ``grid=()`` ``pallas_call`` on TPU)."""
+    if cfg.use_pallas:
+        from repro.kernels import ops as kernel_ops
+        pivots, errors, G_sel = kernel_ops.fused_graft_select_batched(
+            V, G, g_bar, cfg.r_max)
+        return jax.vmap(
+            lambda p, e, gs, gb: _finalize(cfg, p, e, gs, gb, step)
+        )(pivots, errors, G_sel, g_bar)
+    return jax.vmap(lambda v, g, gb: graft_select(cfg, v, g, gb, step)
+                    )(V, G, g_bar)
 
 
 def graft_sampler_fn(cfg: GraftConfig, inputs: SelectionInputs,
@@ -108,5 +132,5 @@ def select_from_batch(cfg: GraftConfig, batch_matrix: jax.Array,
 
 
 __all__ = ["GraftConfig", "GraftState", "SelectionState", "init_state",
-           "graft_select", "graft_sampler_fn", "maybe_refresh",
-           "select_from_batch"]
+           "graft_select", "graft_select_batched", "graft_sampler_fn",
+           "maybe_refresh", "pivot_and_sweep", "select_from_batch"]

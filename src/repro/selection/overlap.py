@@ -1,0 +1,74 @@
+"""Selection/train overlap: hide the refresh behind the train step.
+
+The sequential ``graft_train_step`` embeds the selection refresh in the SAME
+jitted program as the subset train step (a ``lax.cond``), so a refresh step
+is one long serial dispatch — features → MaxVol → rank sweep → fwd/bwd —
+and every steady-state step still carries the compiled selection branch.
+
+The :class:`OverlappedSelector` splits them into two programs and leans on
+JAX async dispatch:
+
+  * at a refresh boundary the selection forward is ENQUEUED first and the
+    subset train step immediately after; the refresh result is a
+    ``SelectionState`` of device futures that the train dispatch consumes
+    WITHOUT any host sync, so the host keeps issuing work (while the device
+    drains train steps t..t+S−1 the host is already at step t+S issuing the
+    next refresh);
+  * between refreshes the step program is ``subset_train_step`` alone — no
+    selection branch compiled in at all.
+
+Trajectory equivalence: the refresh consumes exactly the ``(params, batch,
+step)`` triple the sequential path's ``lax.cond`` would — selection for
+step ``t`` is issued at step ``t``, never from stale params — so pivots,
+weights, and the loss trajectory are identical to ``graft_train_step``
+(asserted step-by-step in ``tests/test_train_integration.py``). Enable it
+declaratively with ``ExperimentConfig.graft.overlap = True`` (excluded from
+``config_hash``: it changes the dispatch schedule, not the experiment).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OverlappedSelector:
+    """Refresh scheduler over host-side step control.
+
+    ``step(state, batch, step)`` takes the HOST step index (the trainer's
+    loop variable, which mirrors ``state['step']``) so refresh scheduling
+    never syncs on the device.
+    """
+
+    def __init__(self, mcfg, tcfg, donate: bool = True):
+        # lazy import: launch.steps imports repro.selection at module scope
+        from repro.launch import steps as steps_lib
+        if not tcfg.use_graft:
+            raise ValueError("OverlappedSelector requires TrainConfig.graft")
+        self.refresh_every = tcfg.graft.refresh_every
+        self._refresh = jax.jit(steps_lib.make_selection_refresh(mcfg, tcfg))
+        self._train = jax.jit(
+            functools.partial(steps_lib.subset_train_step, mcfg, tcfg),
+            donate_argnums=(0,) if donate else ())
+
+    def step(self, state: Dict[str, Any], batch,
+             step: int) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+        """One train step; refreshes the subset first when ``step`` is a
+        refresh boundary. Returns ``(new_state, metrics)`` with the same
+        metrics keys as ``graft_train_step``."""
+        if step % self.refresh_every == 0:
+            # enqueue the refresh and move on: the result is a bundle of
+            # device futures the train dispatch consumes without host sync.
+            # PjRt usage events order it before the donated train step, so
+            # the donation of state['params'] cannot clobber its inputs.
+            state = dict(state, graft=self._refresh(
+                state["params"], batch, jnp.int32(step)))
+        new_state, metrics = self._train(state, batch)
+        g = new_state["graft"]
+        return new_state, dict(metrics, rank=g.rank, proj_error=g.last_error,
+                               alignment=g.alignment)
+
+
+__all__ = ["OverlappedSelector"]

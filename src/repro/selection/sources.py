@@ -14,9 +14,12 @@ relevance-ordered as Fast MaxVol requires):
 
   * ``svd``         — relevance-ordered SVD of the pooled hiddens (the
                       paper's encoder/'Warm' path; default)
+  * ``sketch_svd``  — randomized range-finder SVD (SAGE-style): O(K·M·L)
+                      matmuls with only an L×L eigh, replacing the K×K Gram
+                      eigendecomposition on the selection hot path
   * ``pca_sketch``  — Gaussian sketch to O(rank) columns, then PCA: the
-                      sketch-based feature path (SAGE-style) whose cost is
-                      independent of d_model
+                      sketch-based feature path whose cost is independent
+                      of d_model
   * ``pooled_raw``  — raw pooled hiddens, columns ordered by energy; no
                       factorization at all (the cheapest baseline)
 
@@ -173,6 +176,8 @@ def pooled_raw_features(A: jax.Array, rank: int) -> jax.Array:
 
 
 SVD = register_features(FeatureExtractor("svd", features_lib.svd_features))
+SKETCH_SVD = register_features(
+    FeatureExtractor("sketch_svd", features_lib.sketch_svd_features))
 PCA_SKETCH = register_features(FeatureExtractor("pca_sketch", pca_sketch_features))
 POOLED_RAW = register_features(FeatureExtractor("pooled_raw", pooled_raw_features))
 

@@ -49,6 +49,60 @@ class TestFeatures:
         assert V1.shape == (40, 6)
         np.testing.assert_allclose(V1, V2)
 
+    @staticmethod
+    def _excess_kurtosis(S):
+        return (np.mean(S ** 4, axis=0)
+                / np.clip(np.mean(S ** 2, axis=0) ** 2, 1e-12, None) - 3.0)
+
+    @pytest.mark.parametrize("K", [32, 64])
+    def test_ica_kurtosis_ordering_at_probe_batch_sizes(self, rng, K):
+        """Rel-ordering precondition at GRAFT probe batch sizes: ICA columns
+        must come out sorted by descending |excess kurtosis| (the ICA
+        relevance measure), and the ordering must be non-degenerate when the
+        batch genuinely mixes heavy-tailed, sub-Gaussian and Gaussian
+        sources."""
+        sources = np.stack([
+            rng.laplace(size=K),                      # heavy tail: kurt ≈ +3
+            rng.uniform(-1, 1, size=K),               # sub-Gaussian: ≈ −1.2
+            rng.normal(size=K),                       # Gaussian: ≈ 0
+        ], axis=1).astype(np.float32)                 # (K, 3)
+        mix = rng.normal(size=(3, 256)).astype(np.float32)
+        A = jnp.asarray(sources @ mix)                # (K, 256) mixed batch
+        V = np.asarray(features.ica_features(A, 3))
+        assert V.shape == (K, 3) and np.all(np.isfinite(V))
+        k = np.abs(self._excess_kurtosis(V))
+        assert np.all(np.diff(k) <= 1e-4), f"|kurtosis| not descending: {k}"
+        # ordering must be real, not a tie: the recovered heavy-tailed
+        # source separates clearly from the least non-Gaussian one
+        assert k[0] > k[-1] + 0.3, k
+
+    def test_sketch_svd_ordered_and_spans_svd_subspace(self, rng):
+        """sketch_svd must match svd_features up to sketching error: same
+        relevance ordering, near-zero principal angles on a matrix with a
+        decaying spectrum, and matching singular-value scales."""
+        K, M, R = 128, 512, 8
+        U = np.linalg.qr(rng.normal(size=(K, K)))[0]
+        Vt = np.linalg.qr(rng.normal(size=(M, M)))[0][:K]
+        s = 10.0 * (0.7 ** np.arange(K))
+        A = jnp.asarray(((U * s) @ Vt).astype(np.float32))
+        Vs = np.asarray(features.svd_features(A, R))
+        Vk = np.asarray(features.sketch_svd_features(A, R))
+        assert Vk.shape == (K, R)
+        norms = np.linalg.norm(Vk, axis=0)
+        assert np.all(np.diff(norms) <= 1e-3), "columns not relevance-ordered"
+        np.testing.assert_allclose(norms, np.linalg.norm(Vs, axis=0),
+                                   rtol=5e-2)
+        qs, _ = np.linalg.qr(Vs)
+        qk, _ = np.linalg.qr(Vk)
+        cosines = np.linalg.svd(qs.T @ qk, compute_uv=False)
+        assert cosines.min() > 0.98, f"principal angles too wide: {cosines}"
+
+    def test_sketch_svd_deterministic_across_calls(self, rng):
+        A = jnp.asarray(rng.normal(size=(48, 96)).astype(np.float32))
+        np.testing.assert_array_equal(
+            np.asarray(features.sketch_svd_features(A, 6)),
+            np.asarray(features.sketch_svd_features(A, 6)))
+
 
 class TestProjection:
     def test_lemma1_identity(self, rng):

@@ -1,6 +1,7 @@
 """Pallas kernel parity on the awkward inputs: non-square and rank-deficient
 feature/gradient matrices (interpret mode vs kernels/ref.py), plus the
-``select_rank`` eps-fallback contract."""
+``select_rank`` eps-fallback contract and the fused selection kernel vs the
+unfused three-dispatch chain."""
 import numpy as np
 import jax.numpy as jnp
 import pytest
@@ -8,6 +9,8 @@ import pytest
 from repro.core import projection
 from repro.kernels import ref
 from repro.kernels.fast_maxvol import fast_maxvol_pallas
+from repro.kernels.graft_select import (fused_graft_select_batched_pallas,
+                                        fused_graft_select_pallas)
 from repro.kernels.projection_sweep import projection_sweep_pallas
 
 
@@ -88,6 +91,90 @@ class TestProjectionSweepParity:
         g = jnp.asarray(rng.normal(size=(d,)).astype(np.float32))
         e = np.asarray(projection_sweep_pallas(G, g, interpret=True))
         assert np.all(e[d:] < 1e-4)
+
+
+class TestFusedSelectParity:
+    """The fused refresh kernel (MaxVol + gather + MGS sweep in ONE
+    ``pallas_call``) vs the unfused ``fast_maxvol`` → ``take`` →
+    ``projection_sweep`` chain: pivots must be bit-identical and prefix
+    errors within 1e-5, including non-square and rank-deficient inputs."""
+
+    @staticmethod
+    def _chain(V, G, g_bar, rank):
+        piv, lv = fast_maxvol_pallas(V, rank, interpret=True)
+        G_sel = jnp.take(G, piv, axis=1)
+        errs = projection_sweep_pallas(G_sel, g_bar, interpret=True)
+        return piv, errs, lv, G_sel
+
+    @pytest.mark.parametrize("K,R,d,rank", [
+        (96, 12, 40, 12),    # tall non-square
+        (20, 16, 64, 10),    # nearly square, partial rank
+        (17, 5, 9, 3),       # odd shapes off the 8x128 lane grid
+    ])
+    def test_non_square(self, rng, K, R, d, rank):
+        V = jnp.asarray(rng.normal(size=(K, R)).astype(np.float32))
+        G = jnp.asarray(rng.normal(size=(d, K)).astype(np.float32))
+        gb = jnp.mean(G, axis=1)
+        piv_f, err_f, lv_f, gsel_f = fused_graft_select_pallas(
+            V, G, gb, rank, interpret=True)
+        piv_u, err_u, lv_u, gsel_u = self._chain(V, G, gb, rank)
+        np.testing.assert_array_equal(np.asarray(piv_f), np.asarray(piv_u))
+        np.testing.assert_allclose(np.asarray(err_f), np.asarray(err_u),
+                                   atol=1e-5)
+        np.testing.assert_allclose(float(lv_f), float(lv_u), rtol=1e-5)
+        # the one-hot-matmul gather is exact, not approximate
+        np.testing.assert_array_equal(np.asarray(gsel_f), np.asarray(gsel_u))
+
+    def test_rank_deficient(self, rng):
+        """Requested rank beyond the true rank of V AND duplicated gradient
+        columns: the safe-pivot guard and the zero-norm MGS branch must fire
+        identically in both paths, with finite monotone errors."""
+        A = rng.normal(size=(64, 3)).astype(np.float32)
+        B = rng.normal(size=(3, 8)).astype(np.float32)
+        V = jnp.asarray(A @ B)                      # true rank 3, ask for 6
+        col = rng.normal(size=(32, 1)).astype(np.float32)
+        G = jnp.asarray(np.concatenate(
+            [col, col, rng.normal(size=(32, 62)).astype(np.float32)], axis=1))
+        gb = jnp.mean(G, axis=1)
+        piv_f, err_f, _, _ = fused_graft_select_pallas(
+            V, G, gb, 6, interpret=True)
+        piv_u, err_u, _, _ = self._chain(V, G, gb, 6)
+        np.testing.assert_array_equal(np.asarray(piv_f), np.asarray(piv_u))
+        np.testing.assert_allclose(np.asarray(err_f), np.asarray(err_u),
+                                   atol=1e-5)
+        e = np.asarray(err_f)
+        assert np.all(np.isfinite(e)) and np.all(np.diff(e) <= 1e-5)
+        assert len(set(np.asarray(piv_f).tolist())) == 6
+
+    def test_batched_matches_single(self, rng):
+        """grid=(B,) variant: every batch row identical to the grid=()
+        kernel on that row."""
+        B, K, R, d, rank = 5, 40, 10, 24, 8
+        Vs = jnp.asarray(rng.normal(size=(B, K, R)).astype(np.float32))
+        Gs = jnp.asarray(rng.normal(size=(B, d, K)).astype(np.float32))
+        gbs = jnp.mean(Gs, axis=2)
+        piv_b, err_b, lv_b, gsel_b = fused_graft_select_batched_pallas(
+            Vs, Gs, gbs, rank, interpret=True)
+        assert piv_b.shape == (B, rank) and gsel_b.shape == (B, d, rank)
+        for b in range(B):
+            piv_s, err_s, lv_s, gsel_s = fused_graft_select_pallas(
+                Vs[b], Gs[b], gbs[b], rank, interpret=True)
+            np.testing.assert_array_equal(np.asarray(piv_b[b]),
+                                          np.asarray(piv_s))
+            np.testing.assert_allclose(np.asarray(err_b[b]),
+                                       np.asarray(err_s), atol=1e-6)
+            np.testing.assert_allclose(float(lv_b[b]), float(lv_s), rtol=1e-6)
+            np.testing.assert_array_equal(np.asarray(gsel_b[b]),
+                                          np.asarray(gsel_s))
+
+    def test_shape_validation(self, rng):
+        V = jnp.zeros((16, 8), jnp.float32)
+        G = jnp.zeros((4, 12), jnp.float32)          # K mismatch
+        with pytest.raises(ValueError, match="columns"):
+            fused_graft_select_pallas(V, G, jnp.zeros((4,)), 4, interpret=True)
+        with pytest.raises(ValueError, match="rank"):
+            fused_graft_select_pallas(V, jnp.zeros((4, 16)), jnp.zeros((4,)),
+                                      12, interpret=True)
 
 
 class TestSelectRankFallback:

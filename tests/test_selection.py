@@ -179,6 +179,30 @@ class TestVmappedMultiBatch:
             np.testing.assert_allclose(float(multi.last_error[b]),
                                        float(single.last_error), atol=1e-5)
 
+    @pytest.mark.parametrize("use_pallas", [False, True])
+    def test_graft_use_pallas_matches_jnp_reference(self, rng, use_pallas):
+        """Regression: use_pallas under the multi-batch engine used to vmap
+        a grid=() pallas_call (no Mosaic lowering); it now dispatches ONE
+        grid=(B,) fused kernel. Both settings must agree with the jnp
+        single-batch loop."""
+        B, K, d = 3, 24, 16
+        cfg = GraftConfig(rset=(2, 4, 8), eps=0.25, use_pallas=use_pallas)
+        Vs = jnp.asarray(rng.normal(size=(B, K, cfg.r_max)).astype(np.float32))
+        Gs = jnp.asarray(rng.normal(size=(B, d, K)).astype(np.float32))
+        gbs = jnp.mean(Gs, axis=2)
+        multi = engine.select_multi_batch(cfg, "graft", Vs, Gs, gbs)
+        for b in range(B):
+            single = engine.select_batch(CFG, "graft", Vs[b], Gs[b], gbs[b])
+            np.testing.assert_array_equal(np.asarray(multi.pivots[b]),
+                                          np.asarray(single.pivots))
+            assert int(multi.rank[b]) == int(single.rank)
+            np.testing.assert_allclose(np.asarray(multi.weights[b]),
+                                       np.asarray(single.weights), atol=1e-6)
+            np.testing.assert_allclose(float(multi.last_error[b]),
+                                       float(single.last_error), atol=1e-5)
+            np.testing.assert_allclose(float(multi.alignment[b]),
+                                       float(single.alignment), atol=1e-5)
+
     def test_microbatch_stack_feeds_vmapped_path(self, rng):
         from repro.data import DataConfig, SyntheticLM
         data = SyntheticLM(DataConfig(vocab_size=64, seq_len=8, global_batch=4))
@@ -283,7 +307,7 @@ class TestSourcesRegistry:
 
     def test_builtins_registered(self):
         from repro.selection import available_features, available_grad_sources
-        for f in ("svd", "pca_sketch", "pooled_raw"):
+        for f in ("svd", "sketch_svd", "pca_sketch", "pooled_raw"):
             assert f in available_features()
         for g in ("probe", "logit_embed"):
             assert g in available_grad_sources()
@@ -295,7 +319,8 @@ class TestSourcesRegistry:
         with pytest.raises(KeyError, match="unknown grad source"):
             resolve_grad_source("bogus")
 
-    @pytest.mark.parametrize("name", ["svd", "pca_sketch", "pooled_raw"])
+    @pytest.mark.parametrize("name", ["svd", "sketch_svd", "pca_sketch",
+                                      "pooled_raw"])
     def test_feature_extractors_shapes_and_order(self, rng, name):
         from repro.selection import resolve_features
         K, M, R = 16, 48, 4
@@ -327,7 +352,7 @@ class TestSourcesRegistry:
         toks = jnp.asarray(rng.integers(0, mcfg.vocab_size, (8, 32)),
                            dtype=jnp.int32)
         batch = {"tokens": toks, "labels": toks}
-        for fm in ("svd", "pca_sketch", "pooled_raw"):
+        for fm in ("svd", "sketch_svd", "pca_sketch", "pooled_raw"):
             for gm in ("probe", "logit_embed"):
                 tcfg = default_train_config("minicpm-2b", batch=8,
                                             feature_mode=fm, grad_mode=gm)

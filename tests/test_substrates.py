@@ -312,6 +312,24 @@ class TestMetricsAndEval:
         assert "tokens_per_s" in rows[1] and "mfu" in rows[1]
         assert rows[1]["tokens_seen"] == 200
 
+    def test_jsonl_rows_buffered_until_flush(self, tmp_path):
+        """One logical row per step, but host writes only every
+        ``flush_every`` rows and on close — the step loop never pays a
+        per-step file syscall."""
+        from repro.launch.metrics import MetricsLogger, read_metrics
+        path = str(tmp_path / "buffered.jsonl")
+        lg = MetricsLogger(path, flush_every=3)
+        lg.log(0, {"loss": 1.0})
+        lg.log(1, {"loss": 2.0})
+        assert read_metrics(path) == []               # still buffered
+        lg.log(2, {"loss": 3.0})                      # hits the boundary
+        assert [r["step"] for r in read_metrics(path)] == [0, 1, 2]
+        lg.log(3, {"loss": 4.0})
+        lg.close()                                    # close drains the tail
+        rows = read_metrics(path)
+        assert [r["step"] for r in rows] == [0, 1, 2, 3]
+        assert rows[3]["loss"] == 4.0
+
     def test_eval_stream_disjoint_and_ppl(self):
         from repro import configs
         from repro.launch.evaluate import make_eval_fn

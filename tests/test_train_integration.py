@@ -52,6 +52,64 @@ class TestTrainLoop:
             assert key in h
 
 
+class TestOverlappedSelector:
+    """graft.overlap=True splits the refresh into its own dispatch
+    (double-buffered, pipelined against the train stream) — the trajectory
+    must be IDENTICAL to the sequential lax.cond path."""
+
+    @staticmethod
+    def _cfg(overrides=()):
+        from repro.api import ExperimentConfig
+        base = ["train.steps=8", "train.batch=8", "train.seq=16",
+                "train.log_every=0", "graft.rset=[2,4]",
+                "graft.refresh_every=3"]
+        return ExperimentConfig().apply_overrides(base + list(overrides))
+
+    def test_trajectory_matches_sequential(self):
+        from repro.api import Trainer
+        seq_cfg = self._cfg()
+        ov_cfg = self._cfg(["graft.overlap=true"])
+        # overlap is a dispatch schedule, not an experiment: hashes agree
+        assert seq_cfg.config_hash() == ov_cfg.config_hash()
+        r_seq = Trainer(seq_cfg, use_default_callbacks=False).fit()
+        r_ov = Trainer(ov_cfg, use_default_callbacks=False).fit()
+        np.testing.assert_allclose(
+            [h["loss"] for h in r_seq["history"]],
+            [h["loss"] for h in r_ov["history"]], rtol=1e-6)
+        assert [h["rank"] for h in r_seq["history"]] == \
+            [h["rank"] for h in r_ov["history"]]
+        np.testing.assert_allclose(r_seq["final_loss"], r_ov["final_loss"],
+                                   rtol=1e-6)
+
+    def test_overlap_metrics_match_sequential_keys(self):
+        from repro.api import Trainer
+        report = Trainer(self._cfg(["graft.overlap=true", "train.steps=4"]),
+                         use_default_callbacks=False).fit()
+        h = report["history"][0]
+        for key in ("loss", "grad_norm", "rank", "proj_error", "alignment"):
+            assert key in h
+
+    def test_refresh_cadence_respected(self):
+        """The selector refreshes exactly at step % S == 0: pivots may only
+        change at refresh boundaries."""
+        import jax.numpy as jnp
+        from repro.selection.overlap import OverlappedSelector
+        from repro.api import Trainer
+        cfg = self._cfg(["train.steps=1"])
+        tr = Trainer(cfg, use_default_callbacks=False)
+        tr.fit()                                      # builds mcfg/tcfg/state
+        sel = OverlappedSelector(tr.mcfg, tr.tcfg, donate=False)
+        state = steps_lib.init_train_state(
+            tr.mcfg, tr.tcfg, jax.random.PRNGKey(0), 8)
+        batch = {k: jnp.asarray(v) for k, v in tr.data.batch_at(0).items()}
+        pivots = []
+        for step in range(6):
+            state, _ = sel.step(state, batch, step)
+            pivots.append(np.asarray(state["graft"].pivots).tolist())
+        assert pivots[0] == pivots[1] == pivots[2]    # refresh at 0, hold
+        assert pivots[3] == pivots[4] == pivots[5]    # refresh at 3, hold
+
+
 class TestGraftVsRandomSubset:
     def test_graft_selects_better_than_random_on_skewed_batch(self, rng):
         """On a batch with a few dominant directions, GRAFT's projection
