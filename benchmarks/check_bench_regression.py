@@ -1,0 +1,139 @@
+"""Perf-regression gate: diff a freshly-measured BENCH_selection.json
+against the committed repo-root baseline and fail on regression.
+
+Hardware-independent fields only:
+
+  * ``dispatch_per_refresh`` — kernel launches / gathers per selection
+    refresh must never INCREASE (the fused-dispatch win is the repo's
+    headline perf property);
+  * compiled FLOPs (``features_*`` and ``scaling`` entries) — must not grow
+    beyond ``--tol`` relative, and the sketch-vs-svd ``flops_ratio`` must
+    not shrink below it.
+
+Wall-clock fields are deliberately ignored (CI machines are noisy).
+
+Prints a markdown delta table; when ``$GITHUB_STEP_SUMMARY`` is set (or
+``--summary PATH`` given) the table is appended there so the delta shows up
+in the job summary. Exit code 1 on any regression.
+
+Usage::
+
+    PYTHONPATH=src:. python benchmarks/check_bench_regression.py \
+        BENCH_selection.json BENCH_current.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Any, Dict, List, Tuple
+
+Row = Tuple[str, float, float, bool]   # metric, baseline, current, regressed
+
+
+def _fmt(v: float) -> str:
+    if v == int(v) and abs(v) < 1e6:
+        return str(int(v))
+    return f"{v:.4g}"
+
+
+def compare(baseline: Dict[str, Any], current: Dict[str, Any],
+            tol: float) -> Tuple[List[Row], List[str]]:
+    rows: List[Row] = []
+    problems: List[str] = []
+
+    def check(name: str, b: float, c: float, bad: bool, why: str) -> None:
+        rows.append((name, b, c, bad))
+        if bad:
+            problems.append(f"{name}: {why} (baseline {_fmt(b)}, "
+                            f"current {_fmt(c)})")
+
+    # --- dispatch shape: exact counters, monotone gate -------------------
+    for path, entry in sorted(baseline.get("dispatch_per_refresh", {}).items()):
+        cur = current.get("dispatch_per_refresh", {}).get(path)
+        if cur is None:
+            problems.append(f"dispatch_per_refresh['{path}'] missing from "
+                            "the current report")
+            continue
+        for k in ("pallas_call", "gather"):
+            b, c = float(entry.get(k, 0)), float(cur.get(k, 0))
+            check(f"dispatch.{path}.{k}", b, c, c > b,
+                  "dispatch count increased")
+
+    # --- compiled FLOPs: tolerance gate ---------------------------------
+    for key in sorted(baseline):
+        if not key.startswith("features_"):
+            continue
+        base_f, cur_f = baseline[key], current.get(key)
+        if cur_f is None:
+            problems.append(f"'{key}' missing from the current report")
+            continue
+        for name in ("svd", "sketch_svd"):
+            b = float(base_f[name]["flops"])
+            c = float(cur_f[name]["flops"])
+            check(f"{key}.{name}.flops", b, c, c > b * (1 + tol),
+                  f"compiled FLOPs grew > {tol:.0%}")
+        b, c = float(base_f["flops_ratio"]), float(cur_f["flops_ratio"])
+        check(f"{key}.flops_ratio", b, c, c < b * (1 - tol),
+              f"sketch_svd FLOPs win shrank > {tol:.0%}")
+
+    cur_scaling = {e["name"]: e for e in current.get("scaling", [])}
+    for entry in baseline.get("scaling", []):
+        cur = cur_scaling.get(entry["name"])
+        if cur is None:
+            problems.append(f"scaling entry '{entry['name']}' missing from "
+                            "the current report")
+            continue
+        b, c = float(entry["flops"]), float(cur["flops"])
+        check(f"scaling.{entry['name']}.flops", b, c, c > b * (1 + tol),
+              f"compiled FLOPs grew > {tol:.0%}")
+    return rows, problems
+
+
+def markdown_table(rows: List[Row]) -> str:
+    lines = ["| metric | baseline | current | Δ | |",
+             "|---|---:|---:|---:|---|"]
+    for name, b, c, bad in rows:
+        delta = "0" if b == c else (f"{(c - b) / b:+.1%}" if b else f"+{_fmt(c)}")
+        lines.append(f"| `{name}` | {_fmt(b)} | {_fmt(c)} | {delta} | "
+                     f"{'❌ REGRESSION' if bad else '✅'} |")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline", help="committed BENCH_selection.json")
+    ap.add_argument("current", help="freshly-measured report")
+    ap.add_argument("--tol", type=float, default=0.05,
+                    help="relative tolerance for FLOPs fields "
+                         "(dispatch counts are exact)")
+    ap.add_argument("--summary", default=None,
+                    help="markdown summary path "
+                         "(default: $GITHUB_STEP_SUMMARY when set)")
+    args = ap.parse_args(argv)
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.current) as f:
+        current = json.load(f)
+    rows, problems = compare(baseline, current, args.tol)
+
+    table = markdown_table(rows)
+    title = ("## selection perf gate — REGRESSION" if problems
+             else "## selection perf gate — OK")
+    body = title + "\n\n" + table + "\n"
+    if problems:
+        body += "\n" + "\n".join(f"- **{p}**" for p in problems) + "\n"
+    print(body)
+    summary_path = args.summary or os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary_path:
+        with open(summary_path, "a") as f:
+            f.write(body + "\n")
+    for p in problems:
+        print(f"PERF REGRESSION: {p}", file=sys.stderr)
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,73 @@
+"""GRAFT vs random / loss_topk on the synthetic_classification workload —
+the data-source registry demo: the SAME Experiment API, Trainer, samplers,
+and selection forward as the LM pipeline, pointed at a non-LM task with one
+override (``data.source=synthetic_classification``).
+
+The source is an imbalanced Gaussian-mixture stream with label noise — the
+regime where the samplers actually rank differently: random subsets miss
+rare classes, loss-topk chases flipped labels, GRAFT's MaxVol pivots chase
+feature diversity.
+
+Usage:  PYTHONPATH=src python examples/train_classifier_graft.py
+        PYTHONPATH=src python examples/train_classifier_graft.py \
+            --steps 120 --samplers graft random loss_topk full
+"""
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.api import ExperimentConfig, Trainer
+from repro.launch.evaluate import make_eval_fn_for
+
+
+def run_one(sampler: str, args) -> dict:
+    cfg = ExperimentConfig().apply_overrides([
+        f"train.steps={args.steps}",
+        f"train.batch={args.batch}",
+        "train.log_every=0",
+        f"train.sampler={sampler}",
+        f"optimizer.learning_rate={args.lr}",
+        "data.source=synthetic_classification",
+        f"data.num_classes={args.classes}",
+        f"data.imbalance={args.imbalance}",
+        f"data.label_noise={args.label_noise}",
+    ])
+    trainer = Trainer(cfg)
+    report = trainer.fit()
+    evaluate = make_eval_fn_for(trainer.config, trainer.mcfg, num_batches=8)
+    metrics = evaluate(trainer.state["params"])
+    losses = [h["loss"] for h in report["history"]]
+    return {
+        "final_loss": round(report["final_loss"], 4),
+        "loss_drop": round(sum(losses[:5]) / 5 - sum(losses[-5:]) / 5, 4),
+        "eval_acc": round(metrics["eval_acc"], 4),
+        "eval_loss": round(metrics["eval_loss"], 4),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--classes", type=int, default=10)
+    ap.add_argument("--imbalance", type=float, default=1.0)
+    ap.add_argument("--label-noise", type=float, default=0.1)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--samplers", nargs="+",
+                    default=["graft", "random", "loss_topk"])
+    args = ap.parse_args()
+
+    rows = {}
+    for sampler in args.samplers:
+        rows[sampler] = run_one(sampler, args)
+        print(f"[{sampler:>9s}] {rows[sampler]}", flush=True)
+    print(json.dumps(rows, indent=1))
+    best = max(rows, key=lambda s: rows[s]["eval_acc"])
+    print(f"\nbest eval accuracy: {best} ({rows[best]['eval_acc']})")
+
+
+if __name__ == "__main__":
+    main()

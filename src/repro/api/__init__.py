@@ -4,7 +4,8 @@ One declarative ``ExperimentConfig`` (JSON round-trip, flat CLI overrides,
 stable ``config_hash``), one pluggable ``Trainer`` whose side effects are
 ``Callback`` plugins, and registries for every strategy axis: samplers
 (``repro.selection.registry``), feature extractors and gradient sources
-(``repro.selection.sources``).
+(``repro.selection.sources``), and task/data sources (``repro.data.sources``
+— swap the workload with ``--data.source=synthetic_classification``).
 
 Quickstart::
 
@@ -23,6 +24,7 @@ CLI::
 
     python -m repro.api --model.arch=minicpm-2b --train.steps=5
     python -m repro.api --config exp.json --graft.feature_mode=pca_sketch
+    python -m repro.api --data.source=synthetic_classification --train.steps=5
     python -m repro.api --resume /ckpts/run1
 """
 from repro.api.callbacks import (Callback, CheckpointCallback,
@@ -33,10 +35,13 @@ from repro.api.config import (DataConfig, ExperimentConfig, GraftConfig,
                               ModelConfig, OptimizerConfig, TrainConfig,
                               apply_overrides)
 from repro.api.trainer import Trainer
+from repro.data.sources import (ClassificationConfig, VisionConfig,
+                                available_sources as available_data_sources)
 
 __all__ = [
     "ExperimentConfig", "ModelConfig", "TrainConfig", "GraftConfig",
-    "DataConfig", "OptimizerConfig", "apply_overrides",
+    "DataConfig", "ClassificationConfig", "VisionConfig",
+    "available_data_sources", "OptimizerConfig", "apply_overrides",
     "Trainer", "run", "resume",
     "Callback", "default_callbacks", "PreemptionCallback", "EvalCallback",
     "MetricsCallback", "StragglerCallback", "ConsoleCallback",

@@ -6,7 +6,10 @@ Three input sources, later ones winning:
   2. ``--config exp.json`` — a saved config file
   3. flat dotted overrides: ``--train.steps=5 --graft.eps=0.3``
      (``--graft=none`` disables selection; values are JSON, falling back
-     to strings)
+     to strings). ``--data.source=<name>`` swaps the training workload to
+     any registered task/data source (``repro.data.sources``) — put
+     model/train overrides BEFORE it, per-source ``--data.field=value``
+     overrides after.
 
 ``--resume DIR`` ignores all of the above and reconstructs the experiment
 from the manifest embedded in ``DIR``'s latest checkpoint.

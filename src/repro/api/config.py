@@ -9,8 +9,12 @@ training run.
                     and checkpoint cadence (``repro.api.TrainConfig``)
   * ``graft``     — the paper's selection hyper-parameters, or ``None`` for
                     the full-batch baseline (``repro.selection.GraftConfig``)
-  * ``data``      — synthetic-pipeline parameters; ``None`` derives them
-                    from model + train (``repro.data.DataConfig``)
+  * ``data``      — a TAGGED section: any config registered in the
+                    task/data-source registry (``repro.data.sources``),
+                    serialized with its ``source`` name. ``None`` derives
+                    the default ``synthetic_lm`` section from model + train;
+                    ``--data.source=synthetic_classification`` swaps the
+                    workload (per-source fields then override on top)
   * ``optimizer`` — ``repro.optim.OptimizerConfig``; ``total_steps``/
                     ``warmup_steps`` of 0 mean "derive from train.steps"
 
@@ -30,6 +34,7 @@ import json
 from typing import Any, Dict, Iterable, Optional, Tuple
 
 from repro.data import DataConfig
+from repro.data import sources as data_sources
 from repro.optim import OptimizerConfig
 from repro.selection.base import GraftConfig
 
@@ -42,9 +47,15 @@ class ModelConfig:
     smoke: bool = True                  # smoke (CPU-sized) vs published config
     overrides: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
-    def build(self):
+    def build(self, extra_overrides: Optional[Dict[str, Any]] = None):
+        """``extra_overrides`` are the task-pinned fields of the data
+        source's adapter (vocab = class count, input frontend) — they win
+        over user overrides, since a conflicting user value could only
+        produce a mismatched head or frontend downstream."""
         from repro import configs as config_lib
         ov = dict(self.overrides)
+        if extra_overrides:
+            ov.update(extra_overrides)
         return (config_lib.get_smoke_config(self.arch, **ov) if self.smoke
                 else config_lib.get_config(self.arch, **ov))
 
@@ -78,7 +89,7 @@ _SECTION_TYPES = {
     "model": ModelConfig,
     "train": TrainConfig,
     "graft": GraftConfig,
-    "data": DataConfig,
+    "data": DataConfig,      # the DEFAULT source; actual class is registry-tagged
     "optimizer": OptimizerConfig,
 }
 _OPTIONAL_SECTIONS = ("graft", "data")
@@ -90,7 +101,7 @@ class ExperimentConfig:
     train: TrainConfig = TrainConfig()
     graft: Optional[GraftConfig] = GraftConfig(
         rset=(2, 4, 8), eps=0.25, refresh_every=5, grad_mode="probe")
-    data: Optional[DataConfig] = None
+    data: Optional[Any] = None          # any registered data-source config
     optimizer: OptimizerConfig = OptimizerConfig(
         name="adamw", learning_rate=3e-4, schedule="cosine",
         total_steps=0, warmup_steps=0)
@@ -113,9 +124,15 @@ class ExperimentConfig:
                 opt, warmup_steps=max(train.steps // 20, 1))
         data = self.data
         if data is None:
-            mcfg = self.model.build()
-            data = DataConfig(vocab_size=mcfg.vocab_size, seq_len=train.seq,
-                              global_batch=train.batch, seed=train.seed)
+            data = data_sources.derive_config(
+                "synthetic_lm", self.model.build(), batch=train.batch,
+                seq=train.seq, seed=train.seed)
+        elif data_sources.entry_for_config(data).task.finalize is not None:
+            # explicit section with derivable sentinels (embed_dim /
+            # global_batch of 0): fill them against model + train
+            data = data_sources.finalize_config(
+                data, self.model.build(), batch=train.batch, seq=train.seq,
+                seed=train.seed)
         return dataclasses.replace(self, train=train, optimizer=opt, data=data)
 
     # ------------------------------------------------------------------
@@ -124,34 +141,31 @@ class ExperimentConfig:
     def build(self):
         """→ (model config, step-level TrainConfig, data pipeline).
 
-        Validates that an explicit ``data`` section agrees with model/train
-        — a mismatched vocab silently NaNs the loss (out-of-range token ids
-        clamp in gather), and a mismatched batch/seq fails with an opaque
-        jit shape error; both deserve a loud message instead."""
-        from repro.data import SyntheticLM
+        Everything data-shaped resolves through the task/data-source
+        registry: the adapter pins the model fields the task requires
+        (vocab = class count, input frontend) and validates that an
+        explicit ``data`` section agrees with model/train — a mismatched
+        vocab silently NaNs the loss (out-of-range token ids clamp in
+        gather), and a mismatched batch/embed-dim fails with an opaque jit
+        shape error; both deserve a loud message instead."""
         from repro.launch import steps as steps_lib
         cfg = self.finalized()
-        mcfg = cfg.model.build()
         tr, d = cfg.train, cfg.data
-        mismatches = [
-            f"data.{k}={got} != {want} ({src})"
-            for k, got, want, src in [
-                ("global_batch", d.global_batch, tr.batch, "train.batch"),
-                ("seq_len", d.seq_len, tr.seq, "train.seq"),
-                ("vocab_size", d.vocab_size, mcfg.vocab_size, "model vocab"),
-            ] if got != want]
+        entry = data_sources.entry_for_config(d)
+        mcfg = cfg.model.build(extra_overrides=entry.task.model_overrides(d))
+        mismatches = entry.task.validate(d, mcfg, tr.batch, tr.seq)
         if mismatches:
             raise ValueError(
-                "data section disagrees with model/train: "
+                f"data section ({entry.name}) disagrees with model/train: "
                 + "; ".join(mismatches)
-                + " — fix the fields or set data=none to re-derive")
+                + " — fix the fields, or re-derive by putting model/train "
+                f"overrides BEFORE data.source={entry.name}")
         tcfg = steps_lib.TrainConfig(
             optimizer=cfg.optimizer, graft=cfg.graft,
             sampler=tr.sampler,
             probe_positions=tr.probe_positions,
             microbatches=tr.microbatches)
-        data = SyntheticLM(d)
-        return mcfg, tcfg, data
+        return mcfg, tcfg, entry.build(d)
 
     # ------------------------------------------------------------------
     # serialization
@@ -161,6 +175,13 @@ class ExperimentConfig:
         for name in _SECTION_TYPES:
             section = getattr(self, name)
             out[name] = None if section is None else _section_to_dict(section)
+        if out["data"] is not None:
+            # tag the section with its registry name — except the default
+            # LM source, which stays untagged so pre-registry configs keep
+            # their config_hash (from_dict reads a missing tag as LM)
+            name = data_sources.source_name_of(self.data)
+            if name != "synthetic_lm":
+                out["data"]["source"] = name
         return out
 
     def to_json(self, indent: Optional[int] = None) -> str:
@@ -176,7 +197,8 @@ class ExperimentConfig:
                     kwargs[name] = None
                     continue
                 raise KeyError(f"experiment dict missing section '{name}'")
-            kwargs[name] = _section_from_dict(typ, raw)
+            kwargs[name] = (_data_section_from_dict(raw) if name == "data"
+                            else _section_from_dict(typ, raw))
         return cls(**kwargs)
 
     @classmethod
@@ -239,6 +261,15 @@ def _section_to_dict(section) -> Dict[str, Any]:
     return out
 
 
+def _data_section_from_dict(raw: Dict[str, Any]):
+    """The ``data`` section is tagged: ``{"source": <registry name>,
+    **fields}``. A missing tag reads as ``synthetic_lm`` (pre-registry
+    manifests)."""
+    raw = dict(raw)
+    name = raw.pop("source", "synthetic_lm")
+    return _section_from_dict(data_sources.get_source(name).config_cls, raw)
+
+
 def _section_from_dict(typ, raw: Dict[str, Any]):
     defaults = typ()
     kwargs = {}
@@ -279,6 +310,14 @@ def _coerce(value: Any, current: Any) -> Any:
     return value
 
 
+def _derive_data(cfg: ExperimentConfig, source: str):
+    """Fully-materialized default ``data`` section for ``source`` against
+    ``cfg``'s model + train."""
+    return data_sources.derive_config(
+        source, cfg.model.build(), batch=cfg.train.batch, seq=cfg.train.seq,
+        seed=cfg.train.seed)
+
+
 def _apply_one(cfg: ExperimentConfig, key: str, raw: str) -> ExperimentConfig:
     value = _parse_value(raw)
     if "." not in key:                       # whole-section assignment
@@ -290,15 +329,25 @@ def _apply_one(cfg: ExperimentConfig, key: str, raw: str) -> ExperimentConfig:
                 raise ValueError(f"section '{key}' cannot be disabled")
             return dataclasses.replace(cfg, **{key: None})
         if isinstance(value, dict):
-            return dataclasses.replace(
-                cfg, **{key: _section_from_dict(_SECTION_TYPES[key], value)})
+            section = (_data_section_from_dict(value) if key == "data"
+                       else _section_from_dict(_SECTION_TYPES[key], value))
+            return dataclasses.replace(cfg, **{key: section})
         raise ValueError(f"override '{key}={raw}': expected none or a dict")
 
     section_name, field = key.split(".", 1)
     if section_name not in _SECTION_TYPES:
         raise KeyError(f"unknown config section '{section_name}' "
                        f"(have {sorted(_SECTION_TYPES)})")
-    typ = _SECTION_TYPES[section_name]
+    if (section_name, field) == ("data", "source"):
+        # workload swap: a fresh section for the named source, derived from
+        # model/train (per-source field overrides then apply on top)
+        if not isinstance(value, str):
+            raise ValueError(f"data.source expects a registry name "
+                             f"(have {data_sources.available_sources()})")
+        if cfg.data is not None and \
+                data_sources.source_name_of(cfg.data) == value:
+            return cfg
+        return dataclasses.replace(cfg, data=_derive_data(cfg, value))
     section = getattr(cfg, section_name)
     if section is None:                      # re-enable optional section
         if section_name == "graft":
@@ -307,6 +356,10 @@ def _apply_one(cfg: ExperimentConfig, key: str, raw: str) -> ExperimentConfig:
             # data: derive from model/train so vocab/batch/seq agree —
             # raw DataConfig() defaults would silently mismatch the model
             section = cfg.finalized().data
+    # the data section's concrete class is registry-tagged, not the static
+    # table entry — fields resolve against the live section
+    typ = type(section) if section_name == "data" \
+        else _SECTION_TYPES[section_name]
     names = {f.name for f in dataclasses.fields(typ)}
     if field not in names:
         raise KeyError(f"unknown field '{field}' in section "
@@ -339,9 +392,16 @@ def _refresh_derived(old: ExperimentConfig, new: ExperimentConfig,
             and new.train.probe_positions in (0, min(64, old.train.seq)):
         new = dataclasses.replace(new, train=dataclasses.replace(
             new.train, probe_positions=0))
-    if section_name != "data" and new.data is not None \
-            and new.data == dataclasses.replace(old, data=None).finalized().data:
-        new = dataclasses.replace(new, data=None)
+    if section_name != "data" and new.data is not None:
+        source = data_sources.source_name_of(new.data)
+        if new.data == _derive_data(old, source):
+            # the section was (still) fully derived: re-derive it for the
+            # new model/train instead of keeping stale vocab/batch/dims.
+            # For the default source the None sentinel keeps finalized()
+            # as the single derivation point.
+            new = dataclasses.replace(
+                new, data=None if source == "synthetic_lm"
+                else _derive_data(new, source))
     return new
 
 

@@ -58,7 +58,8 @@ def per_sample_grads_probe(head_loss_fn: Callable, probe_params, hiddens,
 
 
 def logit_error_embeddings(logits: jax.Array, labels: jax.Array,
-                           hiddens: jax.Array) -> jax.Array:
+                           hiddens: jax.Array,
+                           mask: jax.Array = None) -> jax.Array:
     """Cheap per-sample gradient embedding without any extra backward.
 
     For softmax-CE the per-sample gradient w.r.t. the head input is
@@ -66,16 +67,29 @@ def logit_error_embeddings(logits: jax.Array, labels: jax.Array,
     surrogate: ``e_k = ℓ_k · mean_s h_{k,s}`` with ℓ the per-sample loss and
     the residual error norm as the weight. Shapes: logits (K,S,V) or (K,V);
     labels (K,S) or (K,); hiddens (K,S,E) or (K,E). Returns (K,E).
+
+    ``mask`` (K,S) restricts the error signal to labeled positions —
+    frontends that prepend unlabeled patch/frame positions (vlm) would
+    otherwise dominate the embedding with fake label-0 error. ``None``
+    means all positions count (numerically identical to the unmasked
+    form for all-ones masks).
     """
     if logits.ndim == 2:
         logits, labels, hiddens = logits[:, None, :], labels[:, None], hiddens[:, None, :]
+        mask = None if mask is None else mask[:, None]
     logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
     p = jnp.exp(logp)
     onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=jnp.float32)
     err = p - onehot                                       # (K,S,V)
     err_norm = jnp.sqrt(jnp.sum(err * err, axis=-1))       # (K,S)
+    loss = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]  # (K,S)
+    if mask is not None:
+        m = mask.astype(jnp.float32)
+        err_norm = err_norm * m
+        scale = (jnp.sum(loss * m, axis=-1, keepdims=True) /
+                 jnp.maximum(jnp.sum(m, axis=-1, keepdims=True), 1.0))
+    else:
+        scale = jnp.mean(loss, axis=-1, keepdims=True)
     w = err_norm / (jnp.sum(err_norm, axis=-1, keepdims=True) + 1e-9)
     pooled = jnp.einsum("ks,kse->ke", w, hiddens.astype(jnp.float32))
-    loss = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]  # (K,S)
-    scale = jnp.mean(loss, axis=-1, keepdims=True)
     return pooled * scale

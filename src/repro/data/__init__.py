@@ -1,5 +1,23 @@
-"""Deterministic, host-sharded, resumable synthetic data pipelines."""
-from repro.data.pipeline import (DataConfig, SyntheticClassification,
-                                 SyntheticLM, batches)
+"""Deterministic, host-sharded, resumable synthetic data pipelines + the
+task/data-source registry (``repro.data.sources``)."""
+from repro.data.pipeline import (ArraySpec, DataConfig, DataSourceBase,
+                                 SyntheticClassification, SyntheticLM,
+                                 batches)
+from repro.data.sources import (ClassificationConfig, SourceEntry,
+                                SyntheticClassificationSource,
+                                SyntheticVisionSource, TaskAdapter,
+                                VisionConfig, available_sources,
+                                build_source, derive_config,
+                                entry_for_config, get_source,
+                                register_source, source_name_of)
 
-__all__ = ["DataConfig", "SyntheticLM", "SyntheticClassification", "batches"]
+__all__ = [
+    "ArraySpec", "DataConfig", "DataSourceBase", "SyntheticLM",
+    "SyntheticClassification", "batches",
+    # data-source registry
+    "SourceEntry", "TaskAdapter", "register_source", "get_source",
+    "available_sources", "entry_for_config", "source_name_of",
+    "derive_config", "build_source",
+    "ClassificationConfig", "SyntheticClassificationSource",
+    "VisionConfig", "SyntheticVisionSource",
+]

@@ -10,13 +10,86 @@ Design goals that mirror a production loader:
     Zipfian unigrams, so models actually reduce loss and subset-selection
     quality differences show up (a pure-uniform stream would make every
     selection method look identical).
+
+Every training source implements the ``DataSource`` protocol (see
+``DataSourceBase``): ``spec()`` declares the local batch layout,
+``batch_at(step)``/``__call__(step)`` produce the host-local shard, and the
+resumable iterator state is ONE integer. New task workloads (classification,
+vision, …) register in ``repro.data.sources`` — this module keeps only the
+protocol plumbing and the LM source.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional, Tuple
+from typing import Dict, Iterator, NamedTuple, Optional, Tuple
 
 import numpy as np
+
+
+class ArraySpec(NamedTuple):
+    """Shape/dtype of one batch entry (numpy-level on purpose: the data
+    layer never imports jax; ``launch/specs.py`` converts to
+    ``jax.ShapeDtypeStruct`` for the dry-run compiler)."""
+    shape: Tuple[int, ...]
+    dtype: np.dtype
+
+
+class DataSourceBase:
+    """Shared plumbing for every registered data source.
+
+    Subclasses set ``self.cfg`` (with ``global_batch``/``num_hosts``/
+    ``host_index``) and implement ``batch_at(step)`` + ``spec()``; the base
+    provides the one-integer resumable iterator, ``__call__``, and the
+    microbatch-stack layout the vmapped selection engine consumes.
+    """
+
+    cfg: "object"
+
+    def __init__(self):
+        self._step = 0
+
+    # ---- protocol: batch layout + production ----
+    def spec(self) -> Dict[str, ArraySpec]:
+        """Local (host-shard) batch layout: name → (shape, dtype)."""
+        raise NotImplementedError
+
+    def batch_at(self, step: int) -> Dict[str, np.ndarray]:
+        """Deterministic local batch for ``step`` (host shard only)."""
+        raise NotImplementedError
+
+    def __call__(self, step: int) -> Dict[str, np.ndarray]:
+        return self.batch_at(step)
+
+    # ---- resumable iterator state (one integer) ----
+    def state_dict(self) -> Dict[str, int]:
+        return {"step": self._step}
+
+    def load_state_dict(self, state: Dict[str, int]) -> None:
+        self._step = int(state["step"])
+
+    def microbatch_stack(self, step: int, num_micro: int) -> Dict[str, np.ndarray]:
+        """``num_micro`` consecutive batches stacked on a new leading axis —
+        the input layout of the vmapped multi-batch selection path
+        (``repro.selection.engine.select_multi_batch``): one jit selects for
+        every microbatch at once. Does not advance the iterator."""
+        stack = [self.batch_at(step + i) for i in range(num_micro)]
+        return {k: np.stack([b[k] for b in stack]) for k in stack[0]}
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        while True:
+            b = self.batch_at(self._step)
+            self._step += 1
+            yield b
+
+
+def zipf_class_probs(num_classes: int, imbalance: float) -> np.ndarray:
+    """Zipf-like class skew (``imbalance=0`` → uniform): random subsets miss
+    rare classes, which is exactly the regime where diversity-seeking
+    selection pays off."""
+    if imbalance <= 0:
+        return np.full(num_classes, 1.0 / num_classes)
+    p = 1.0 / np.arange(1, num_classes + 1, dtype=np.float64) ** imbalance
+    return p / p.sum()
 
 
 @dataclasses.dataclass
@@ -37,10 +110,11 @@ class DataConfig:
         return self.global_batch // self.num_hosts
 
 
-class SyntheticLM:
+class SyntheticLM(DataSourceBase):
     """Markov-over-clusters token source; __call__(step) -> local batch."""
 
     def __init__(self, cfg: DataConfig):
+        super().__init__()
         self.cfg = cfg
         root = np.random.default_rng(cfg.seed)
         C, V = cfg.num_clusters, cfg.vocab_size
@@ -60,14 +134,11 @@ class SyntheticLM:
         # precomputed CDFs: token sampling is a binary search, not a choice()
         self._tok_cdf = np.cumsum(self.cluster_tokens, axis=1)
         self._trans_cdf = np.cumsum(self.trans, axis=1)
-        self._step = 0
 
-    # ---- resumable iterator state ----
-    def state_dict(self) -> Dict[str, int]:
-        return {"step": self._step}
-
-    def load_state_dict(self, state: Dict[str, int]) -> None:
-        self._step = int(state["step"])
+    def spec(self) -> Dict[str, ArraySpec]:
+        B, S = self.cfg.local_batch, self.cfg.seq_len
+        return {"tokens": ArraySpec((B, S), np.dtype(np.int32)),
+                "labels": ArraySpec((B, S), np.dtype(np.int32))}
 
     def batch_at(self, step: int) -> Dict[str, np.ndarray]:
         """Deterministic batch for ``step`` (local shard only)."""
@@ -89,20 +160,6 @@ class SyntheticLM:
                         cfg.num_clusters - 1)
         return {"tokens": tokens[:, :-1], "labels": tokens[:, 1:]}
 
-    def microbatch_stack(self, step: int, num_micro: int) -> Dict[str, np.ndarray]:
-        """``num_micro`` consecutive batches stacked on a new leading axis —
-        the input layout of the vmapped multi-batch selection path
-        (``repro.selection.engine.select_multi_batch``): one jit selects for
-        every microbatch at once. Does not advance the iterator."""
-        stack = [self.batch_at(step + i) for i in range(num_micro)]
-        return {k: np.stack([b[k] for b in stack]) for k in stack[0]}
-
-    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
-        while True:
-            b = self.batch_at(self._step)
-            self._step += 1
-            yield b
-
 
 class SyntheticClassification:
     """Gaussian-cluster classification set (paper's CIFAR/IMDB analog).
@@ -119,11 +176,9 @@ class SyntheticClassification:
         self.num_classes = num_classes
         centers = g.normal(size=(num_classes, dim)) * 2.0
         if imbalance > 0:
-            # Zipf-like class skew: random subsets miss rare classes, which is
-            # exactly the regime where diversity-seeking selection pays off
-            pcls = (1.0 / np.arange(1, num_classes + 1) ** imbalance)
-            pcls /= pcls.sum()
-            self.y = g.choice(num_classes, size=n, p=pcls).astype(np.int32)
+            self.y = g.choice(num_classes, size=n,
+                              p=zipf_class_probs(num_classes, imbalance)
+                              ).astype(np.int32)
         else:
             self.y = g.integers(num_classes, size=n).astype(np.int32)
         scales = 0.5 + 1.5 * g.random(num_classes)           # per-class difficulty

@@ -148,8 +148,8 @@ def compile_cell(cell: specs_lib.Cell, mesh) -> Dict[str, Any]:
 def run_cell(arch: str, shape: str, mesh_kind: str, variant: str,
              with_deltas: bool = True, smoke: bool = False,
              mesh_override=None, rules_preset: str = "default",
-             feature_mode: str = "svd",
-             grad_mode: str = "probe") -> Dict[str, Any]:
+             feature_mode: str = "svd", grad_mode: str = "probe",
+             data_source: str = "synthetic_lm") -> Dict[str, Any]:
     cfg = config_lib.get_config(arch)
     period = max(len(cfg.layer_pattern), 1) if cfg.layer_pattern else 1
     if cfg.global_layer_indices:
@@ -165,6 +165,9 @@ def run_cell(arch: str, shape: str, mesh_kind: str, variant: str,
 
     rule_overrides = dict(specs_lib.RULE_PRESETS[rules_preset])
     sel_modes = {"feature_mode": feature_mode, "grad_mode": grad_mode}
+    if shape.startswith("train"):
+        # task workloads only exist for train cells (serve stays LM-shaped)
+        sel_modes["data_source"] = data_source
     out: Dict[str, Any] = {
         "arch": arch, "shape": shape, "mesh": mesh_kind,
         "mesh_shape": dict(zip(mesh.axis_names, mesh.devices.shape)),
@@ -233,6 +236,9 @@ def main(argv=None) -> int:
                          "(repro.selection.sources registry)")
     ap.add_argument("--grad-mode", default="probe",
                     help="selection gradient source for graft cells")
+    ap.add_argument("--data-source", default="synthetic_lm",
+                    help="task/data-source registry name for train cells "
+                         "(repro.data.sources registry)")
     ap.add_argument("--skip-existing", action="store_true")
     ap.add_argument("--list", action="store_true")
     args = ap.parse_args(argv)
@@ -276,7 +282,8 @@ def main(argv=None) -> int:
                            ("baseline" if v == "baseline" else "serve"),
                            with_deltas=not args.no_deltas, smoke=args.smoke,
                            feature_mode=args.feature_mode,
-                           grad_mode=args.grad_mode)
+                           grad_mode=args.grad_mode,
+                           data_source=args.data_source)
             res["ok"] = True
         except Exception:
             res = {"arch": arch, "shape": shape, "mesh": args.mesh,

@@ -1,50 +1,94 @@
-"""Held-out evaluation: perplexity over a fixed synthetic eval stream.
+"""Held-out evaluation over a fixed synthetic eval stream, task-aware.
 
-The eval stream uses a shifted seed so it never overlaps the train stream
-(the generator is seeded per (seed, step, example) — disjoint seed spaces).
+The eval stream is the SAME registered data source (same distribution —
+same Markov chain / mixture centers / grating signatures) read at a step
+offset the training loop can never reach, so eval examples are drawn from
+the training distribution but never overlap the train stream (generators
+are seeded per (seed, step, example) — disjoint step spaces). The metric
+family comes from the source's task adapter: ``lm`` sources report
+perplexity, ``classification`` sources report accuracy.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Dict
 
 import jax
 import jax.numpy as jnp
 
 from repro.data import DataConfig, SyntheticLM
+from repro.data import sources as data_sources
 from repro.models import model as model_lib
 
-EVAL_SEED_OFFSET = 7_777_777
+# step offset of the held-out slice of the stream: training reaches step
+# indices 0..steps, eval reads from 7.7M up — disjoint per-example streams
+EVAL_STEP_OFFSET = 7_777_777
+EVAL_SEED_OFFSET = EVAL_STEP_OFFSET          # back-compat alias
 
 
 def make_eval_fn(mcfg: model_lib.ModelConfig, batch: int, seq: int,
                  seed: int = 0, num_batches: int = 4):
+    """LM-source eval (the legacy entry point; kept for ad-hoc scripts)."""
     data = SyntheticLM(DataConfig(vocab_size=mcfg.vocab_size, seq_len=seq,
-                                  global_batch=batch,
-                                  seed=seed + EVAL_SEED_OFFSET))
-    eval_batches = [data.batch_at(i) for i in range(num_batches)]
+                                  global_batch=batch, seed=seed))
+    return _lm_eval(mcfg, [data.batch_at(EVAL_STEP_OFFSET + i)
+                           for i in range(num_batches)])
 
+
+def _lm_eval(mcfg: model_lib.ModelConfig, eval_batches):
     @jax.jit
-    def one(params, tokens, labels):
-        loss, _ = model_lib.loss_fn(mcfg, params,
-                                    {"tokens": tokens, "labels": labels})
+    def one(params, batch):
+        loss, _ = model_lib.loss_fn(mcfg, params, batch)
         return loss
 
     def evaluate(params) -> Dict[str, float]:
-        losses = []
-        for b in eval_batches:
-            losses.append(float(one(params, jnp.asarray(b["tokens"]),
-                                    jnp.asarray(b["labels"]))))
+        losses = [float(one(params, _device_batch(b))) for b in eval_batches]
         mean = sum(losses) / len(losses)
         return {"eval_loss": mean, "eval_ppl": float(jnp.exp(mean))}
 
     return evaluate
 
 
+def _classification_eval(mcfg: model_lib.ModelConfig, eval_batches):
+    @jax.jit
+    def one(params, batch):
+        h, mask = model_lib.forward_hiddens(mcfg, params, batch)
+        labels = model_lib._pad_labels(batch["labels"], h.shape[1])
+        logits = model_lib.logits_from_hiddens(mcfg, params, h)
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+        denom = jnp.maximum(jnp.sum(mask), 1.0)
+        loss = jnp.sum(nll * mask) / denom
+        hit = (jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32)
+        return loss, jnp.sum(hit * mask) / denom
+
+    def evaluate(params) -> Dict[str, float]:
+        pairs = [one(params, _device_batch(b)) for b in eval_batches]
+        n = len(pairs)
+        return {"eval_loss": sum(float(l) for l, _ in pairs) / n,
+                "eval_acc": sum(float(a) for _, a in pairs) / n}
+
+    return evaluate
+
+
+def _device_batch(b):
+    return {k: jnp.asarray(v) for k, v in b.items()}
+
+
 def make_eval_fn_for(experiment, mcfg: model_lib.ModelConfig,
                      num_batches: int = 4):
     """Eval fn for a ``repro.api.ExperimentConfig`` — one place owns the
-    eval-batch policy (≤8 sequences, train seq/seed) so the EvalCallback and
-    ad-hoc scripts agree."""
-    tr = experiment.train
-    return make_eval_fn(mcfg, batch=min(tr.batch, 8), seq=tr.seq,
-                        seed=tr.seed, num_batches=num_batches)
+    eval-batch policy (≤8 examples per batch, seed shifted out of the train
+    stream) so the EvalCallback and ad-hoc scripts agree, for EVERY
+    registered data source."""
+    dcfg = experiment.finalized().data
+    entry = data_sources.entry_for_config(dcfg)
+    eval_cfg = dataclasses.replace(
+        dcfg, global_batch=min(dcfg.global_batch, 8),
+        num_hosts=1, host_index=0)
+    data = entry.build(eval_cfg)
+    eval_batches = [data.batch_at(EVAL_STEP_OFFSET + i)
+                    for i in range(num_batches)]
+    if entry.task.kind == "classification":
+        return _classification_eval(mcfg, eval_batches)
+    return _lm_eval(mcfg, eval_batches)

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 from repro import configs as config_lib
 from repro.core.graft import GraftConfig
+from repro.data import sources as data_sources
 from repro.distributed import sharding as sh
 from repro.launch import steps as steps_lib
 from repro.models import decode as decode_lib
@@ -95,6 +96,15 @@ def default_train_config(arch: str, use_graft: bool = True,
 # abstract inputs
 # ---------------------------------------------------------------------------
 
+def source_batch_specs(source: data_sources.DataSourceBase
+                       ) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Abstract batch tree straight from a data source's ``spec()`` — the
+    registry-driven counterpart of :func:`batch_specs` (which infers the
+    layout from the model family alone)."""
+    return {k: jax.ShapeDtypeStruct(s.shape, s.dtype)
+            for k, s in source.spec().items()}
+
+
 def batch_specs(mcfg: model_lib.ModelConfig, batch: int, seq: int) -> Dict[str, jax.ShapeDtypeStruct]:
     i32 = jnp.int32
     if mcfg.family == "audio":
@@ -167,7 +177,8 @@ def build_cell(arch: str, shape: str, *, variant: str = "graft",
                scan_override: Optional[bool] = None,
                rule_overrides: Optional[Dict[str, Any]] = None,
                smoke: bool = False, exact_cost: bool = False,
-               feature_mode: str = "svd", grad_mode: str = "probe") -> Cell:
+               feature_mode: str = "svd", grad_mode: str = "probe",
+               data_source: Optional[str] = None) -> Cell:
     """Construct the lowered-artifact description for one cell.
 
     variant: 'graft' | 'baseline' (train cells only).
@@ -178,6 +189,11 @@ def build_cell(arch: str, shape: str, *, variant: str = "graft",
     feature_mode/grad_mode: selection-input strategies from the
     ``repro.selection.sources`` registries (graft train cells only) — lets
     the dry-run compare roofline costs of e.g. ``pca_sketch`` vs ``svd``.
+    data_source: a registered task/data-source name (train cells only) —
+    the cell's model config takes the source adapter's task-pinned fields
+    (vocab = class count, input frontend) and the abstract batch comes from
+    the source's ``spec()`` instead of the family-inferred LM layout, so
+    the dry-run compiles/rooflines every registered workload.
     """
     ok, why = cell_is_supported(arch, shape)
     if not ok:
@@ -211,7 +227,14 @@ def build_cell(arch: str, shape: str, *, variant: str = "graft",
         tcfg = default_train_config(arch, use_graft=use_graft, batch=B,
                                     feature_mode=feature_mode,
                                     grad_mode=grad_mode)
-        batch = batch_specs(mcfg, B, S)
+        if data_source is not None and data_source != "synthetic_lm":
+            entry = data_sources.get_source(data_source)
+            dcfg = entry.task.derive(mcfg, batch=B, seq=S, seed=0)
+            mcfg = dataclasses.replace(
+                mcfg, **entry.task.model_overrides(dcfg))
+            batch = source_batch_specs(entry.build(dcfg))
+        else:
+            batch = batch_specs(mcfg, B, S)
         abstract_state = jax.eval_shape(
             lambda key: steps_lib.init_train_state(mcfg, tcfg, key, B),
             jax.ShapeDtypeStruct((2,), jnp.uint32))

@@ -107,8 +107,12 @@ def selection_inputs(mcfg, tcfg: TrainConfig, params, batch
 
     The feature path (V) and gradient-embedding path (G) are resolved from
     the ``repro.selection.sources`` registries by ``GraftConfig.feature_mode``
-    (``svd`` | ``pca_sketch`` | ``pooled_raw``) and ``GraftConfig.grad_mode``
-    (``probe`` | ``logit_embed``). Defaults reproduce the paper's setup:
+    (``svd`` | ``sketch_svd`` | ``pca_sketch`` | ``pooled_raw`` | ``ica``)
+    and ``GraftConfig.grad_mode`` (``probe`` | ``logit_embed`` | ``full``).
+    Batch-layout agnostic: any registered data source's batch works —
+    ``forward_hiddens`` dispatches on the model frontend, and the label
+    padding below covers frontends whose labels don't span every position.
+    Defaults reproduce the paper's setup:
     relevance-ordered SVD of mean-pooled final hiddens × per-example probe
     gradients from the softmax error signal (no extra backward). Scores =
     per-example probe cross-entropy (drives ``loss_topk``-style samplers for
@@ -128,13 +132,18 @@ def selection_inputs(mcfg, tcfg: TrainConfig, params, batch
         labels = jnp.concatenate(
             [jnp.zeros((labels.shape[0], pad), labels.dtype), labels], axis=1)
     lp = labels[:, ::stride]
+    mp = mask[:, ::stride].astype(jnp.float32)     # labeled probe positions
     logits = model_lib.logits_from_hiddens(mcfg, params, hp)
     emb = grad_source(sources_lib.GradSourceInputs(
-        logits=logits, labels=lp, hiddens=hp, mcfg=mcfg, params=params))
+        logits=logits, labels=lp, hiddens=hp, mcfg=mcfg, params=params,
+        batch=batch, mask=mp))
     emb = constrain(emb, ("act_batch", None))      # (K, E) f32
     logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
-    scores = -jnp.mean(jnp.take_along_axis(logp, lp[..., None], axis=-1)[..., 0],
-                       axis=-1)                    # (K,) probe CE per example
+    nll = -jnp.take_along_axis(logp, lp[..., None], axis=-1)[..., 0]
+    # masked mean: frontends that prepend unlabeled patch/frame positions
+    # (vlm) must not let fake label-0 CE at those positions swamp the score
+    scores = jnp.sum(nll * mp, axis=-1) / \
+        jnp.maximum(jnp.sum(mp, axis=-1), 1.0)     # (K,) probe CE per example
     # the K×R feature/gradient matrices are tiny — replicate for MaxVol
     pooled = jnp.sum(h.astype(jnp.float32) * mask[..., None], axis=1) / \
         jnp.maximum(jnp.sum(mask, axis=1), 1.0)[:, None]

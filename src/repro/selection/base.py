@@ -23,8 +23,8 @@ class GraftConfig:
     eps: float = 0.25                          # projection-error threshold
     refresh_every: int = 20                    # S in the paper (20–50)
     feature_mode: str = "svd"                 # svd | sketch_svd | pca_sketch
-                                              #   | pooled_raw
-    grad_mode: str = "probe"                  # probe | logit_embed
+                                              #   | pooled_raw | ica
+    grad_mode: str = "probe"                  # probe | logit_embed | full
                                               # (registries: selection/sources.py)
     use_pallas: bool = False                   # TPU kernels vs jnp reference
     overlap: bool = False                      # double-buffered refresh/train

@@ -22,6 +22,9 @@ relevance-ordered as Fast MaxVol requires):
                       of d_model
   * ``pooled_raw``  — raw pooled hiddens, columns ordered by energy; no
                       factorization at all (the cheapest baseline)
+  * ``ica``         — FastICA on the whitened pooled hiddens, components
+                      re-ordered by descending excess kurtosis
+                      (non-Gaussianity = relevance; paper §13 ablation)
 
 Built-in gradient sources (``GradSourceInputs → (K, E) embeddings``):
 
@@ -30,11 +33,14 @@ Built-in gradient sources (``GradSourceInputs → (K, E) embeddings``):
   * ``logit_embed`` — exact per-example head-input gradient Wᵀ(p − y)
                       averaged over probe positions (one extra matmul with
                       the unembedding, still no backward pass)
+  * ``full``        — EXACT per-sample gradients of the whole parameter
+                      pytree via ``vmap(grad)`` over the raw batch
+                      (``core/grad_features.py:per_sample_grads_full``).
+                      E = |Θ|: Alg. 1 verbatim — the oracle for small-model
+                      runs, not a production path.
 
-Remaining gaps (see ROADMAP): ``encoder`` features (model-based AE
-embeddings need a second encoder's params plumbed in), ``ica`` features
-(kurtosis ordering is brittle at probe batch sizes), and the exact ``full``
-per-sample-gradient source from ``core/grad_features.py``.
+Remaining gap (see ROADMAP): ``encoder`` features (model-based AE
+embeddings need a second encoder's params plumbed in).
 """
 from __future__ import annotations
 
@@ -45,18 +51,24 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import features as features_lib
-from repro.core.grad_features import logit_error_embeddings
+from repro.core.grad_features import (logit_error_embeddings,
+                                      per_sample_grads_full)
 
 
 class GradSourceInputs(NamedTuple):
     """Everything a gradient source may read. ``logits``/``labels``/
     ``hiddens`` are probe-position slices (K, S', ·); ``mcfg``/``params``
-    give head-aware sources access to the unembedding."""
+    give head-aware sources access to the unembedding; ``batch`` is the RAW
+    model batch (leaves with leading K) for sources that re-run the model
+    per example (``full``)."""
     logits: jax.Array            # (K, S', V) probe-position logits
     labels: jax.Array            # (K, S') probe-position labels
     hiddens: jax.Array           # (K, S', E) probe-position hiddens
     mcfg: Any = None             # model config (static)
     params: Any = None           # model params pytree
+    batch: Any = None            # raw batch pytree (leading K leaves)
+    mask: Any = None             # (K, S') loss mask at probe positions;
+                                 # None = every position is labeled
 
 
 @dataclasses.dataclass(frozen=True)
@@ -77,11 +89,15 @@ class GradSource:
     name: str
     fn: Callable[[GradSourceInputs], jax.Array]
     needs_params: bool = False   # reads inputs.params/mcfg (head weights)
+    needs_batch: bool = False    # reads inputs.batch (re-runs the model)
 
     def __call__(self, inputs: GradSourceInputs) -> jax.Array:
         if self.needs_params and inputs.params is None:
             raise ValueError(
                 f"grad source '{self.name}' requires GradSourceInputs.params")
+        if self.needs_batch and inputs.batch is None:
+            raise ValueError(
+                f"grad source '{self.name}' requires GradSourceInputs.batch")
         return self.fn(inputs)
 
 
@@ -180,6 +196,7 @@ SKETCH_SVD = register_features(
     FeatureExtractor("sketch_svd", features_lib.sketch_svd_features))
 PCA_SKETCH = register_features(FeatureExtractor("pca_sketch", pca_sketch_features))
 POOLED_RAW = register_features(FeatureExtractor("pooled_raw", pooled_raw_features))
+ICA = register_features(FeatureExtractor("ica", features_lib.ica_features))
 
 
 # ---------------------------------------------------------------------------
@@ -188,15 +205,16 @@ POOLED_RAW = register_features(FeatureExtractor("pooled_raw", pooled_raw_feature
 
 def probe_grad_source(inp: GradSourceInputs) -> jax.Array:
     """Probe-gradient surrogate from the softmax error signal (no backward):
-    loss-scaled, error-norm-weighted pooled hiddens. See
-    ``core/grad_features.py:logit_error_embeddings``."""
-    return logit_error_embeddings(inp.logits, inp.labels, inp.hiddens)
+    loss-scaled, error-norm-weighted pooled hiddens over LABELED positions.
+    See ``core/grad_features.py:logit_error_embeddings``."""
+    return logit_error_embeddings(inp.logits, inp.labels, inp.hiddens,
+                                  mask=inp.mask)
 
 
 def logit_embed_grad_source(inp: GradSourceInputs) -> jax.Array:
     """Exact per-example gradient of the probe CE w.r.t. the head input,
-    ``Wᵀ(p − y)`` averaged over probe positions — one extra matmul with the
-    unembedding, still no backward pass. Returns (K, d_model)."""
+    ``Wᵀ(p − y)`` averaged over LABELED probe positions — one extra matmul
+    with the unembedding, still no backward pass. Returns (K, d_model)."""
     mcfg, params = inp.mcfg, inp.params
     if mcfg is not None and getattr(mcfg, "tie_embeddings", False):
         head = params["embed"].T                       # (D, V)
@@ -211,10 +229,34 @@ def logit_embed_grad_source(inp: GradSourceInputs) -> jax.Array:
     p = jnp.exp(logp)
     onehot = jax.nn.one_hot(inp.labels, inp.logits.shape[-1], dtype=jnp.float32)
     err = p - onehot                                   # (K, S', V)
+    if inp.mask is not None:
+        m = inp.mask.astype(jnp.float32)
+        err = err * m[..., None]
+        count = jnp.maximum(jnp.sum(m, axis=-1, keepdims=True), 1.0)
+    else:
+        count = jnp.float32(err.shape[1])
     emb = jnp.einsum("ksv,dv->kd", err, head.astype(jnp.float32))
-    return emb / jnp.float32(err.shape[1])
+    return emb / count
+
+
+def full_grad_source(inp: GradSourceInputs) -> jax.Array:
+    """EXACT per-sample gradients of the WHOLE parameter pytree — Alg. 1
+    without the last-layer approximation, via ``vmap(grad)`` over the raw
+    batch. Returns (K, |Θ|): the oracle for small-model runs (E = |Θ| makes
+    this O(K·|Θ|) memory — never the production path)."""
+    from repro.models import model as model_lib
+
+    def one_example_loss(params, example):
+        b = jax.tree_util.tree_map(lambda x: x[None], example)
+        loss, _ = model_lib.loss_fn(inp.mcfg, params, b)
+        return loss
+
+    G, _ = per_sample_grads_full(one_example_loss, inp.params, inp.batch)
+    return G.T                                         # (K, |Θ|) f32
 
 
 PROBE = register_grad_source(GradSource("probe", probe_grad_source))
 LOGIT_EMBED = register_grad_source(
     GradSource("logit_embed", logit_embed_grad_source, needs_params=True))
+FULL = register_grad_source(
+    GradSource("full", full_grad_source, needs_params=True, needs_batch=True))

@@ -1,0 +1,337 @@
+"""Task/data-source registry: protocol contracts (spec/one-int state/host
+sharding), tagged ExperimentConfig.data section (JSON round-trip, CLI
+overrides, source swap + rederivation), checkpoint-manifest resume restores
+the right source + step, selection engine on classification batches
+(vmapped == loop), and end-to-end training on every registered workload."""
+import dataclasses
+import json
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.api import ExperimentConfig, Trainer
+from repro.data import (ClassificationConfig, DataConfig, VisionConfig,
+                        available_sources, build_source, derive_config,
+                        entry_for_config, get_source, source_name_of)
+
+SOURCES = ("synthetic_lm", "synthetic_classification", "synthetic_vision")
+
+
+def small_overrides(source, **extra):
+    ov = ["train.steps=6", "train.batch=8", "train.seq=16", "train.seed=3",
+          "train.log_every=0", "graft.rset=[2,4]", "graft.refresh_every=3",
+          f"data.source={source}"]
+    ov += [f"{k}={v}" for k, v in extra.items()]
+    return ov
+
+
+def small_cfg(source, **extra):
+    return ExperimentConfig().apply_overrides(small_overrides(source, **extra))
+
+
+@pytest.fixture
+def smoke_mcfg():
+    from repro import configs
+    return configs.get_smoke_config("minicpm-2b")
+
+
+class TestRegistry:
+    def test_builtin_sources_registered(self):
+        assert set(SOURCES) <= set(available_sources())
+
+    def test_unknown_source_errors_with_available(self):
+        with pytest.raises(KeyError, match="unknown data source"):
+            get_source("bogus")
+        with pytest.raises(KeyError, match="no registered data source"):
+            entry_for_config(object())
+
+    def test_config_classes_are_uniquely_tagged(self):
+        assert source_name_of(DataConfig()) == "synthetic_lm"
+        assert source_name_of(ClassificationConfig()) == \
+            "synthetic_classification"
+        assert source_name_of(VisionConfig()) == "synthetic_vision"
+
+    @pytest.mark.parametrize("source", SOURCES)
+    def test_spec_matches_produced_batches(self, source, smoke_mcfg):
+        dcfg = derive_config(source, smoke_mcfg, batch=8, seq=16, seed=0)
+        data = build_source(dcfg)
+        spec = data.spec()
+        batch = data.batch_at(2)
+        assert set(spec) == set(batch)
+        for k, s in spec.items():
+            assert batch[k].shape == s.shape, k
+            assert batch[k].dtype == s.dtype, k
+
+    @pytest.mark.parametrize("source", SOURCES)
+    def test_state_is_one_integer_and_resumes(self, source, smoke_mcfg):
+        dcfg = derive_config(source, smoke_mcfg, batch=4, seq=8, seed=1)
+        data = build_source(dcfg)
+        it = iter(data)
+        for _ in range(3):
+            next(it)
+        state = data.state_dict()
+        assert state == {"step": 3}
+        fresh = build_source(dcfg)
+        fresh.load_state_dict(json.loads(json.dumps(state)))  # manifest trip
+        a, b = next(iter(fresh)), next(it)
+        for k in a:
+            np.testing.assert_array_equal(a[k], b[k])
+
+    @pytest.mark.parametrize("source", SOURCES)
+    def test_host_sharding_is_byte_exact(self, source, smoke_mcfg):
+        """Per-GLOBAL-example streams: any host count yields the same global
+        batch (elastic re-sharding invariant, same as the LM pipeline)."""
+        dcfg = derive_config(source, smoke_mcfg, batch=8, seq=8, seed=2)
+        full = build_source(dcfg).batch_at(4)
+        shards = [build_source(dataclasses.replace(
+            dcfg, num_hosts=2, host_index=h)).batch_at(4) for h in (0, 1)]
+        for k in full:
+            np.testing.assert_array_equal(
+                full[k], np.concatenate([s[k] for s in shards]))
+
+    def test_classification_imbalance_and_label_noise(self, smoke_mcfg):
+        dcfg = dataclasses.replace(
+            derive_config("synthetic_classification", smoke_mcfg,
+                          batch=64, seq=8, seed=0),
+            imbalance=1.5, label_noise=0.25, num_classes=8)
+        data = build_source(dcfg)
+        classes = np.concatenate([data.classes_at(s) for s in range(8)])
+        counts = np.bincount(classes, minlength=8)
+        # Zipf skew: the head class must dominate the tail class clearly
+        assert counts[0] > 2 * max(counts[-1], 1), counts
+        labels = np.concatenate(
+            [data.batch_at(s)["labels"][:, 0] for s in range(8)])
+        flipped = np.mean(labels != classes)
+        assert 0.05 < flipped < 0.5, flipped   # ~label_noise·(C-1)/C
+
+    def test_vision_images_layout_and_patch_round_trip(self, smoke_mcfg):
+        dcfg = derive_config("synthetic_vision", smoke_mcfg,
+                             batch=4, seq=8, seed=0)
+        data = build_source(dcfg)
+        imgs, classes = data.images_at(1)
+        assert imgs.shape == (4, dcfg.image_size, dcfg.image_size,
+                              dcfg.channels)
+        assert imgs.dtype == np.float32 and classes.shape == (4,)
+        # the model batch's patch rows are exactly the patchified image
+        batch = data.batch_at(1)
+        np.testing.assert_allclose(
+            batch["patch_embeds"][0, 0, :dcfg.patch_dim],
+            imgs[0, :dcfg.patch_size, :dcfg.patch_size, :].reshape(-1),
+            rtol=1e-6)
+        assert np.all(batch["patch_embeds"][..., dcfg.patch_dim:] == 0.0)
+
+
+class TestTaggedConfigSection:
+    @pytest.mark.parametrize("source", SOURCES)
+    def test_json_round_trip(self, source):
+        cfg = small_cfg(source)
+        assert ExperimentConfig.from_json(cfg.to_json()) == cfg
+        fin = cfg.finalized()
+        assert ExperimentConfig.from_json(fin.to_json()) == fin
+        if source == "synthetic_lm":
+            # the default source stays UNTAGGED so pre-registry configs
+            # keep their config_hash (a missing tag reads as LM)
+            assert "source" not in fin.to_dict()["data"]
+        else:
+            assert fin.to_dict()["data"]["source"] == source
+
+    def test_untagged_data_dict_reads_as_lm(self):
+        """Pre-registry manifests have no 'source' key — they must still
+        load as the LM pipeline, and the default LM config_hash must not
+        have changed with the introduction of the tag."""
+        d = ExperimentConfig().finalized().to_dict()
+        assert "source" not in d["data"]
+        cfg = ExperimentConfig.from_dict(d)
+        assert isinstance(cfg.data, DataConfig)
+
+    def test_per_source_field_overrides(self):
+        cfg = small_cfg("synthetic_classification", **{
+            "data.num_classes": 4, "data.imbalance": 0.7,
+            "data.label_noise": 0.1})
+        assert cfg.data.num_classes == 4
+        assert cfg.data.imbalance == 0.7
+        mcfg, _, _ = cfg.build()
+        assert mcfg.vocab_size == 4                  # task-pinned head
+        assert mcfg.frontend == "audio_frames"
+        cfg = small_cfg("synthetic_vision", **{"data.patch_size": 2})
+        assert cfg.data.patch_size == 2
+        assert cfg.build()[0].num_patches == 64
+
+    def test_unknown_field_error_lists_source_fields(self):
+        with pytest.raises(KeyError, match="patch_size"):
+            small_cfg("synthetic_vision", **{"data.bogus": 1})
+        with pytest.raises(KeyError, match="unknown data source"):
+            small_cfg("nope")
+
+    def test_source_swap_derives_from_model_and_train(self):
+        cfg = small_cfg("synthetic_classification")
+        assert cfg.data.global_batch == 8
+        assert cfg.data.embed_dim == cfg.model.build().d_model
+        assert cfg.data.seed == 3                    # train.seed flows in
+
+    def test_untouched_section_rederives_on_later_train_override(self):
+        cfg = ExperimentConfig().apply_overrides(
+            ["data.source=synthetic_vision", "train.batch=8"])
+        assert cfg.data.global_batch == 8
+        cfg.build()                                  # no mismatch raise
+
+    def test_touched_section_errors_loudly_on_later_train_override(self):
+        """Same contract as the LM section: explicitly-edited data + a later
+        conflicting train override must raise, not silently rederive."""
+        cfg = ExperimentConfig().apply_overrides(
+            ["data.source=synthetic_classification", "data.noise=0.5",
+             "train.batch=4"])
+        with pytest.raises(ValueError, match="global_batch"):
+            cfg.build()
+
+    def test_explicit_mismatched_embed_dim_errors_loudly(self):
+        cfg = ExperimentConfig(
+            data=ClassificationConfig(embed_dim=999, global_batch=16))
+        with pytest.raises(ValueError, match="embed_dim"):
+            cfg.build()
+
+    def test_sentinel_fields_finalize_from_model_and_train(self):
+        cfg = ExperimentConfig(data=ClassificationConfig())   # all sentinels
+        fin = cfg.finalized()
+        assert fin.data.embed_dim == cfg.model.build().d_model
+        assert fin.data.global_batch == cfg.train.batch
+        assert fin.finalized() == fin                # idempotent
+
+    def test_config_hash_separates_sources(self):
+        hashes = {small_cfg(s).config_hash() for s in SOURCES}
+        assert len(hashes) == 3
+        # run-environment fields still don't affect the hash
+        a = small_cfg("synthetic_classification")
+        b = a.apply_overrides(["train.log_every=7"])
+        assert a.config_hash() == b.config_hash()
+
+
+class TestTrainAndResume:
+    def test_classification_resume_restores_source_and_step(self, tmp_path):
+        """Kill → resume from the manifest alone: the resumed Trainer must
+        carry the SAME source config (not the LM default), restart at the
+        right step, and land on the uninterrupted final loss."""
+        full = Trainer(small_cfg("synthetic_classification")).fit()
+        ck = str(tmp_path / "ck")
+        interrupted = small_cfg(
+            "synthetic_classification",
+            **{"train.stop_after": 3, "train.checkpoint_dir": ck,
+               "train.checkpoint_every": 100})
+        Trainer(interrupted).fit()
+
+        resumed = Trainer.from_checkpoint(ck)
+        assert isinstance(resumed.config.data, ClassificationConfig)
+        assert resumed.config.config_hash() == full["config_hash"]
+        report = resumed.fit()
+        assert resumed.start_step == 3
+        assert len(report["history"]) == 3           # steps 3..5 only
+        np.testing.assert_allclose(full["final_loss"], report["final_loss"],
+                                   rtol=1e-6)
+
+    def test_vision_trains_and_reports_accuracy(self):
+        report = Trainer(small_cfg(
+            "synthetic_vision", **{"train.eval_every": 3})).fit()
+        eval_rows = [h for h in report["history"] if "eval_acc" in h]
+        assert len(eval_rows) == 2
+        assert all(0.0 <= h["eval_acc"] <= 1.0 for h in eval_rows)
+        assert np.isfinite(report["final_loss"])
+
+    def test_classification_loss_decreases(self):
+        """Acceptance: a 50-step classification run must learn."""
+        cfg = ExperimentConfig().apply_overrides(
+            ["train.steps=50", "train.batch=16", "train.log_every=0",
+             "optimizer.learning_rate=0.003",
+             "data.source=synthetic_classification"])
+        losses = [h["loss"] for h in Trainer(cfg).fit()["history"]]
+        assert np.mean(losses[-10:]) < np.mean(losses[:10]) - 0.3, \
+            (np.mean(losses[:10]), np.mean(losses[-10:]))
+
+
+class TestMaskedSelectionInputs:
+    def test_vision_scores_ignore_unlabeled_patch_positions(self):
+        """Regression: probe CE scores and grad embeddings must be computed
+        over LABELED positions only — on vision batches the 16 unlabeled
+        patch positions (padded label 0) would otherwise dominate the
+        1-position class signal 16:1."""
+        from repro.launch import steps as steps_lib
+        from repro.models import model as M
+        cfg = small_cfg("synthetic_vision").finalized()
+        mcfg, tcfg, data = cfg.build()
+        params = M.init_params(mcfg, jax.random.PRNGKey(0))
+        batch = {k: jnp.asarray(v) for k, v in data.batch_at(0).items()}
+        V, G, gbar, scores = steps_lib.selection_inputs(
+            mcfg, tcfg, params, batch)
+        h, mask = M.forward_hiddens(mcfg, params, batch)
+        logits = M.logits_from_hiddens(mcfg, params, h)
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        lab = M._pad_labels(batch["labels"], h.shape[1])
+        nll = -jnp.take_along_axis(logp, lab[..., None], axis=-1)[..., 0]
+        ref = jnp.sum(nll * mask, 1) / jnp.maximum(jnp.sum(mask, 1), 1.0)
+        np.testing.assert_allclose(np.asarray(scores), np.asarray(ref),
+                                   rtol=1e-5)
+
+    def test_masked_probe_embeddings_match_labeled_only_slice(self, rng):
+        """logit_error_embeddings with a mask == the unmasked call on just
+        the labeled positions (and the all-ones mask is a no-op)."""
+        from repro.core.grad_features import logit_error_embeddings
+        K, S, V, E = 4, 6, 8, 5
+        logits = jnp.asarray(rng.normal(size=(K, S, V)).astype(np.float32))
+        labels = jnp.asarray(rng.integers(0, V, (K, S)), dtype=jnp.int32)
+        hiddens = jnp.asarray(rng.normal(size=(K, S, E)).astype(np.float32))
+        ones = jnp.ones((K, S), jnp.float32)
+        np.testing.assert_allclose(
+            np.asarray(logit_error_embeddings(logits, labels, hiddens)),
+            np.asarray(logit_error_embeddings(logits, labels, hiddens,
+                                              mask=ones)), rtol=1e-6)
+        # mask off the first 4 positions == slicing them away
+        m = ones.at[:, :4].set(0.0)
+        np.testing.assert_allclose(
+            np.asarray(logit_error_embeddings(logits, labels, hiddens,
+                                              mask=m)),
+            np.asarray(logit_error_embeddings(logits[:, 4:], labels[:, 4:],
+                                              hiddens[:, 4:])), rtol=1e-5)
+
+
+class TestSelectionOnClassificationBatches:
+    def test_vmapped_engine_equals_loop(self, smoke_mcfg):
+        """The multi-batch engine on REAL classification selection inputs
+        (microbatch stack → selection_inputs per microbatch) must equal a
+        Python loop of single-batch selections."""
+        from repro.launch import steps as steps_lib
+        from repro.models import model as M
+        from repro.selection import GraftConfig, engine
+
+        cfg = small_cfg("synthetic_classification").finalized()
+        entry = get_source("synthetic_classification")
+        mcfg = cfg.model.build(
+            extra_overrides=entry.task.model_overrides(cfg.data))
+        data = build_source(cfg.data)
+        tcfg = steps_lib.TrainConfig(graft=cfg.graft,
+                                     probe_positions=cfg.train.probe_positions)
+        params = M.init_params(mcfg, jax.random.PRNGKey(0))
+
+        B = 3
+        stack = data.microbatch_stack(step=0, num_micro=B)
+        per_batch = [steps_lib.selection_inputs(
+            mcfg, tcfg, params,
+            {k: jnp.asarray(v[b]) for k, v in stack.items()})
+            for b in range(B)]
+        Vs = jnp.stack([p[0] for p in per_batch])
+        Gs = jnp.stack([p[1] for p in per_batch])
+        gbs = jnp.stack([p[2] for p in per_batch])
+        scores = jnp.stack([p[3] for p in per_batch])
+
+        gcfg = GraftConfig(rset=(2, 4), eps=0.25)
+        keys = jax.random.split(jax.random.PRNGKey(7), B)
+        multi = engine.select_multi_batch(gcfg, "graft", Vs, Gs, gbs,
+                                          scores=scores, keys=keys)
+        for b in range(B):
+            single = engine.select_batch(gcfg, "graft", Vs[b], Gs[b], gbs[b],
+                                         scores=scores[b], key=keys[b])
+            np.testing.assert_array_equal(np.asarray(multi.pivots[b]),
+                                          np.asarray(single.pivots))
+            assert int(multi.rank[b]) == int(single.rank)
+            np.testing.assert_allclose(np.asarray(multi.weights[b]),
+                                       np.asarray(single.weights), atol=1e-6)

@@ -1,6 +1,7 @@
 """Selection engine: registry resolution, sampler contracts, vmapped
 multi-batch == single-batch loop, shard_map data-parallel == single-device
 reference, core.graft compatibility shim."""
+import dataclasses
 import os
 import subprocess
 import sys
@@ -307,9 +308,9 @@ class TestSourcesRegistry:
 
     def test_builtins_registered(self):
         from repro.selection import available_features, available_grad_sources
-        for f in ("svd", "sketch_svd", "pca_sketch", "pooled_raw"):
+        for f in ("svd", "sketch_svd", "pca_sketch", "pooled_raw", "ica"):
             assert f in available_features()
-        for g in ("probe", "logit_embed"):
+        for g in ("probe", "logit_embed", "full"):
             assert g in available_grad_sources()
 
     def test_unknown_names_error_with_available(self):
@@ -377,3 +378,105 @@ class TestSourcesRegistry:
                 sources.register_features(fx)
         finally:
             sources._FEATURES.pop("custom_feat_test", None)
+
+    def test_ica_mode_reachable_from_graft_config(self, rng):
+        """ROADMAP gap closed: feature_mode='ica' resolves through the
+        registry and selection_inputs, with kurtosis-ordered columns."""
+        from repro import configs
+        from repro.launch import steps as steps_lib
+        from repro.launch.specs import default_train_config
+        from repro.models import model as M
+        from repro.selection import resolve_features
+        K, M_, R = 16, 48, 4
+        A = jnp.asarray(rng.normal(size=(K, M_)).astype(np.float32))
+        V = resolve_features("ica")(A, R)
+        assert V.shape == (K, R) and bool(jnp.all(jnp.isfinite(V)))
+        mcfg = configs.get_smoke_config("minicpm-2b")
+        params = M.init_params(mcfg, jax.random.PRNGKey(0))
+        toks = jnp.asarray(rng.integers(0, mcfg.vocab_size, (8, 16)),
+                           dtype=jnp.int32)
+        tcfg = default_train_config("minicpm-2b", batch=8,
+                                    feature_mode="ica")
+        V, G, gbar, scores = steps_lib.selection_inputs(
+            mcfg, tcfg, params, {"tokens": toks, "labels": toks})
+        assert V.shape == (8, tcfg.graft.r_max)
+        assert bool(jnp.all(jnp.isfinite(V)))
+
+    def test_full_grad_source_exact_parity(self, rng):
+        """grad_mode='full' (per_sample_grads_full behind the GradSource
+        protocol) on a tiny f32 model: the mean per-sample gradient must
+        equal the batch-loss gradient (linearity of the mean-CE loss), and
+        the per-sample rows restricted to the lm_head leaf must match the
+        analytic head gradient (1/S)·Σ_s h_s (p−y)_sᵀ."""
+        from repro import configs
+        from repro.models import model as M
+        from repro.selection import sources
+        mcfg = configs.get_smoke_config("stablelm-12b")
+        assert not mcfg.tie_embeddings
+        mcfg = dataclasses.replace(mcfg, param_dtype="float32", num_layers=1)
+        params = M.init_params(mcfg, jax.random.PRNGKey(1))
+        K, S = 4, 8
+        toks = jnp.asarray(rng.integers(0, mcfg.vocab_size, (K, S)),
+                           dtype=jnp.int32)
+        batch = {"tokens": toks, "labels": toks}
+        h, _ = M.forward_hiddens(mcfg, params, batch)
+        logits = M.logits_from_hiddens(mcfg, params, h)
+        src = sources.resolve_grad_source("full")
+        assert src.needs_params and src.needs_batch
+        with pytest.raises(ValueError, match="requires GradSourceInputs.batch"):
+            src(sources.GradSourceInputs(logits=logits, labels=toks,
+                                         hiddens=h, mcfg=mcfg, params=params))
+        emb = src(sources.GradSourceInputs(
+            logits=logits, labels=toks, hiddens=h, mcfg=mcfg, params=params,
+            batch=batch))                                   # (K, |Θ|)
+        num_params = sum(int(np.prod(l.shape)) for l in
+                         jax.tree_util.tree_leaves(params))
+        assert emb.shape == (K, num_params)
+        # 1) mean of per-sample grads == batch gradient
+        gref = jax.grad(lambda p: M.loss_fn(mcfg, p, batch)[0])(params)
+        flat_ref = jnp.concatenate([jnp.ravel(l).astype(jnp.float32)
+                                    for l in jax.tree_util.tree_leaves(gref)])
+        np.testing.assert_allclose(np.asarray(jnp.mean(emb, axis=0)),
+                                   np.asarray(flat_ref), atol=1e-5)
+        # 2) per-sample lm_head rows == analytic (1/S)·h (p−y)ᵀ
+        leaves = jax.tree_util.tree_flatten_with_path(params)[0]
+        offset = 0
+        head_slice = None
+        for path, leaf in leaves:
+            n = int(np.prod(leaf.shape))
+            if "lm_head" in "/".join(str(getattr(p, "key", p)) for p in path):
+                head_slice = (offset, offset + n, leaf.shape)
+            offset += n
+        assert head_slice is not None
+        lo, hi, shape = head_slice
+        p_soft = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+        onehot = jax.nn.one_hot(toks, mcfg.vocab_size, dtype=jnp.float32)
+        analytic = jnp.einsum("ksd,ksv->kdv", h.astype(jnp.float32),
+                              p_soft - onehot) / S
+        np.testing.assert_allclose(
+            np.asarray(emb[:, lo:hi]).reshape((K,) + shape),
+            np.asarray(analytic), atol=2e-4)
+
+    def test_full_grad_source_selects_through_train_step(self, rng):
+        """grad_mode='full' end to end: selection_inputs → a GRAFT train
+        step on a tiny model (the small-model oracle path)."""
+        from repro import configs
+        from repro.launch import steps as steps_lib
+        from repro.launch.specs import default_train_config
+        from repro.models import model as M
+        mcfg = configs.get_smoke_config("minicpm-2b")
+        params = M.init_params(mcfg, jax.random.PRNGKey(0))
+        toks = jnp.asarray(rng.integers(0, mcfg.vocab_size, (8, 16)),
+                           dtype=jnp.int32)
+        batch = {"tokens": toks, "labels": toks}
+        tcfg = default_train_config("minicpm-2b", batch=8, grad_mode="full")
+        V, G, gbar, scores = steps_lib.selection_inputs(
+            mcfg, tcfg, params, batch)
+        num_params = sum(int(np.prod(l.shape)) for l in
+                         jax.tree_util.tree_leaves(params))
+        assert G.shape == (num_params, 8) and gbar.shape == (num_params,)
+        assert bool(jnp.all(jnp.isfinite(G)))
+        state = steps_lib.init_train_state(mcfg, tcfg, jax.random.PRNGKey(2),
+                                           batch_size=8)
+        state, metrics = steps_lib.graft_train_step(mcfg, tcfg, state, batch)
+        assert np.isfinite(metrics["loss"])
