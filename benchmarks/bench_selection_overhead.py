@@ -10,7 +10,14 @@ This suite is also the repo's perf gate for the selection hot path:
     gather), vs 2 ``pallas_call`` + 1 gather for the unfused chain, and the
     batched variant must keep ONE launch for a whole microbatch stack;
   * ``sketch_svd`` vs ``svd`` compiled FLOPs at K=1024, M=4096, R=64 — the
-    sketch path must win by ≥ 5×.
+    sketch path must win by ≥ 5×;
+  * host-stall accounting — the async train loop (deferred ``MetricsFuture``
+    drain + side-stream eval) must keep dispatching ahead of the device
+    queue: under ``graft.overlap`` with ``eval_every`` set, step N+1 is
+    issued while step N's metrics are still device futures. The counter is
+    deterministic for a fixed config (materialization happens only at flush
+    boundaries), so it is gated like the dispatch counts; ``blocked_ms`` is
+    wall clock and recorded but not gated.
 
 Run standalone to emit machine-readable results (tracked across PRs by the
 ``perf-smoke`` CI job)::
@@ -81,6 +88,40 @@ def _count_primitives(fn, *args) -> Dict[str, int]:
 def _dispatch_entry(counts: Dict[str, int]) -> Dict[str, int]:
     return {"pallas_call": counts.get("pallas_call", 0),
             "gather": counts.get("gather", 0)}
+
+
+_HOST_STALL_STEPS = 12                   # async-loop probe config (must stay
+_HOST_STALL_FLUSH = 4                    # fixed: the gate is deterministic
+                                         # only for a fixed cadence)
+
+
+def _host_stall_entry() -> Dict[str, Any]:
+    """Drive the REAL async Trainer loop (overlap + side-stream eval +
+    deferred metrics) and report the dispatch-ahead depth: how many steps
+    were issued while the previous step's metrics were still device
+    futures. Drains happen only at metrics flush boundaries, so for this
+    fixed config the counter is deterministic (steps − flush drains − 1)."""
+    import tempfile
+
+    from repro.api import ExperimentConfig, Trainer
+
+    with tempfile.TemporaryDirectory() as td:
+        cfg = ExperimentConfig().apply_overrides([
+            f"train.steps={_HOST_STALL_STEPS}", "train.batch=8",
+            "train.seq=16", "train.log_every=0", "train.eval_every=4",
+            f"train.metrics_path={td}/m.jsonl",
+            f"train.metrics_flush_every={_HOST_STALL_FLUSH}",
+            "graft.rset=[2,4]", "graft.refresh_every=3",
+            "graft.overlap=true",
+        ])
+        report = Trainer(cfg).fit()
+    h = report["host_loop"]
+    return {
+        "steps": h["steps"],
+        "dispatch_ahead_steps": h["dispatched_ahead"],
+        "blocked_ms_per_step": (1e3 * h.get("metrics_drain_s", 0.0)
+                                / max(h["steps"], 1)),
+    }
 
 
 def collect(quick: bool = False) -> Tuple[List[str], Dict[str, Any]]:
@@ -193,6 +234,16 @@ def collect(quick: bool = False) -> Tuple[List[str], Dict[str, Any]]:
     report["scaling"] = scaling
 
     # ------------------------------------------------------------------
+    # host-stall: the async train loop must run ahead of the device queue
+    # ------------------------------------------------------------------
+    stall = _host_stall_entry()
+    report["host_stall"] = stall
+    rows.append(csv_row(
+        "host_stall", stall["blocked_ms_per_step"] * 1e3,
+        f"dispatch_ahead={stall['dispatch_ahead_steps']}/{stall['steps']}"
+        f";blocked_ms_per_step={stall['blocked_ms_per_step']:.3f}"))
+
+    # ------------------------------------------------------------------
     # every registered sampler through the engine on identical inputs
     # ------------------------------------------------------------------
     K, dv, Rv = 256, 1024, 32
@@ -246,6 +297,12 @@ def check(report: Dict[str, Any]) -> List[str]:
     if ratio < _MIN_FLOPS_RATIO:
         problems.append(f"sketch_svd FLOPs win {ratio:.2f}x < "
                         f"{_MIN_FLOPS_RATIO}x vs svd")
+    stall = report["host_stall"]
+    if stall["dispatch_ahead_steps"] < 1:
+        problems.append(
+            "async host loop never dispatched ahead of metrics "
+            f"materialization: {stall} — a float()/sync crept back onto "
+            "the per-step path")
     return problems
 
 
@@ -259,7 +316,8 @@ def main(argv=None) -> int:
     ap.add_argument("--check", action="store_true",
                     help="exit non-zero if the perf gate regresses (fused "
                          "refresh != 1 pallas_call, batched != 1 launch, "
-                         f"or sketch_svd FLOPs win < {_MIN_FLOPS_RATIO}x)")
+                         f"sketch_svd FLOPs win < {_MIN_FLOPS_RATIO}x, or "
+                         "the async host loop never dispatches ahead)")
     args = ap.parse_args(argv)
     rows, report = collect(quick=args.quick)
     for r in rows:

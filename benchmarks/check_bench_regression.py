@@ -8,9 +8,15 @@ Hardware-independent fields only:
     headline perf property);
   * compiled FLOPs (``features_*`` and ``scaling`` entries) — must not grow
     beyond ``--tol`` relative, and the sketch-vs-svd ``flops_ratio`` must
-    not shrink below it.
+    not shrink below it;
+  * ``host_stall.dispatch_ahead_steps`` — the async train loop's
+    dispatch-ahead depth (steps issued while the previous step's metrics
+    were still device futures) must never DECREASE: it is a deterministic
+    counter for the bench's fixed flush cadence, and a drop means a
+    host↔device sync crept back onto the per-step path.
 
-Wall-clock fields are deliberately ignored (CI machines are noisy).
+Wall-clock fields (including ``host_stall.blocked_ms_per_step``) are
+deliberately ignored (CI machines are noisy).
 
 Prints a markdown delta table; when ``$GITHUB_STEP_SUMMARY`` is set (or
 ``--summary PATH`` given) the table is appended there so the delta shows up
@@ -77,6 +83,19 @@ def compare(baseline: Dict[str, Any], current: Dict[str, Any],
         b, c = float(base_f["flops_ratio"]), float(cur_f["flops_ratio"])
         check(f"{key}.flops_ratio", b, c, c < b * (1 - tol),
               f"sketch_svd FLOPs win shrank > {tol:.0%}")
+
+    # --- host-stall: dispatch-ahead depth, monotone gate -----------------
+    base_stall = baseline.get("host_stall")
+    if base_stall is not None:
+        cur_stall = current.get("host_stall")
+        if cur_stall is None:
+            problems.append("host_stall missing from the current report")
+        else:
+            b = float(base_stall["dispatch_ahead_steps"])
+            c = float(cur_stall["dispatch_ahead_steps"])
+            check("host_stall.dispatch_ahead_steps", b, c, c < b,
+                  "async-loop dispatch-ahead depth decreased (a per-step "
+                  "host sync crept back in)")
 
     cur_scaling = {e["name"]: e for e in current.get("scaling", [])}
     for entry in baseline.get("scaling", []):

@@ -14,8 +14,15 @@ preemption/early-stop are all ``Callback`` plugins dispatched at four hooks:
 
 Ordering contract (the ``priority`` numbers below): preemption decides stop
 BEFORE eval/telemetry run, eval merges metrics BEFORE the JSONL logger
-writes them, and the checkpointer runs LAST so a stop request is always
+queues them, and the checkpointer runs LAST so a stop request is always
 checkpointed before the loop exits (checkpoint-before-stop).
+
+The ``metrics`` argument of ``on_step_end`` is a lazy
+``MetricsFuture`` over device scalars: reading a VALUE (``metrics["loss"]``)
+syncs the host on the device queue, so a callback on the per-step path
+should only touch values at its own boundaries (print steps, checkpoint
+saves, flush drains) — key-level checks (``"eval_loss" in metrics``) are
+always free.
 """
 from __future__ import annotations
 
@@ -27,7 +34,8 @@ from repro.checkpoint import CheckpointManager, EmergencySaver
 from repro.distributed.straggler import StragglerMonitor
 from repro.launch.evaluate import make_eval_fn_for
 from repro.launch.metrics import (MetricsLogger, format_step_line,
-                                  train_step_flops)
+                                  materialize_metrics, train_step_flops)
+from repro.selection.overlap import SideStream
 
 
 class Callback:
@@ -77,35 +85,61 @@ class PreemptionCallback(Callback):
 
 
 class EvalCallback(Callback):
-    """Held-out eval every N steps; merges ``eval_loss``/``eval_ppl`` into
-    the step metrics BEFORE the telemetry logger writes them."""
+    """Held-out eval every N steps, OFF the critical path by default.
+
+    At an eval boundary the jitted evals are DISPATCHED as a non-donated
+    side stream against the live ``state["params"]`` (safe because the
+    dispatch happens before the trainer issues the next donating step —
+    the ``SideStream`` discipline shared with the ``OverlappedSelector``)
+    and the device-scalar results merge into the step's ``MetricsFuture``
+    immediately, tagged with the step they were dispatched at; the actual
+    numbers are collected at the NEXT eval boundary (or ``on_train_end``),
+    by which point the device finished them long ago. ``sync=True``
+    restores blocking eval inside ``on_step_end`` (the escape hatch for
+    tests) — both modes run the identical device computation, so the
+    numbers are bit-identical."""
     priority = 20
 
-    def __init__(self, every: int, num_batches: int = 4):
+    def __init__(self, every: int, num_batches: int = 4, sync: bool = False):
         self.every = every
         self.num_batches = num_batches
+        self.sync = sync
         self.eval_fn = None
+        self.stream = SideStream()
 
     def on_train_start(self, trainer) -> None:
         self.eval_fn = make_eval_fn_for(trainer.config, trainer.mcfg,
                                         num_batches=self.num_batches)
 
     def on_step_end(self, trainer, step, metrics) -> None:
-        if self.every and (step + 1) % self.every == 0:
+        if not (self.every and (step + 1) % self.every == 0):
+            return
+        if self.sync:
             metrics.update(self.eval_fn(trainer.state["params"]))
+            return
+        handle = self.eval_fn.dispatch(trainer.state["params"])
+        metrics.update(handle)          # row tagged with the dispatch step
+        self.stream.launch(step, handle)  # collects the PREVIOUS boundary's
+
+    def on_train_end(self, trainer, report) -> None:
+        self.stream.drain()             # nothing in flight past the loop
 
 
 class MetricsCallback(Callback):
     """JSONL telemetry stream + throughput/MFU tracking. Runs after eval so
-    held-out numbers reach the stream (one row per step). Rows are buffered
-    by the logger and flushed every ``flush_every`` steps and on close, so
-    ``on_step_end`` does not pay a host write syscall per step."""
+    held-out numbers reach the stream (one row per step). Rows are queued
+    lazily (device values and all) and the logger materializes + writes
+    only every ``flush_every`` steps and on close, so ``on_step_end`` pays
+    neither a device sync nor a write syscall per step. Step timing comes
+    from the trainer's dispatch clock, not the gap between log calls —
+    eval/checkpoint pauses land in ``host_overhead_s``, not in ``mfu``."""
     priority = 30
 
     def __init__(self, path: Optional[str] = None, flush_every: int = 20):
         self.path = path
         self.flush_every = flush_every
         self.logger: Optional[MetricsLogger] = None
+        self._primed = False
 
     def on_train_start(self, trainer) -> None:
         tr = trainer.config.train
@@ -118,11 +152,23 @@ class MetricsCallback(Callback):
 
     def on_step_end(self, trainer, step, metrics) -> None:
         tr = trainer.config.train
-        self.logger.log(step, metrics, tokens=tr.batch * tr.seq)
+        tokens = tr.batch * tr.seq
+        if not self._primed:
+            # checkpoint resume hands this fresh logger a mid-run step
+            # counter (start_step is only known after the checkpointer's
+            # on_train_start): seed the cumulative token counter so
+            # resumed runs don't report tokens_seen from zero
+            if trainer.start_step:
+                self.logger.tokens_seen = trainer.start_step * tokens
+            self._primed = True
+        self.logger.log(step, metrics, tokens=tokens,
+                        step_time=trainer.last_step_time)
 
     def on_train_end(self, trainer, report) -> None:
         if self.logger is not None:
             self.logger.close()
+            report.setdefault("host_loop", {})["metrics_drain_s"] = \
+                self.logger.drain_s
 
 
 class StragglerCallback(Callback):
@@ -152,7 +198,9 @@ class LegacyFunctionCallback(Callback):
 
 
 class ConsoleCallback(Callback):
-    """Progress lines every ``log_every`` steps (post-eval metrics)."""
+    """Progress lines every ``log_every`` steps (post-eval metrics). Only
+    the rows actually printed are materialized — the cadence check is
+    key-free, so non-print steps stay sync-free."""
     priority = 60
 
     def __init__(self, every: int = 10):
@@ -211,7 +259,9 @@ class CheckpointCallback(Callback):
             step + 1, trainer.state,
             extra={"train_step": step + 1,
                    "data": trainer.data.state_dict(),
-                   "metrics": metrics,
+                   # a checkpoint boundary is a legitimate sync point: the
+                   # manifest needs JSON floats, not device futures
+                   "metrics": materialize_metrics(metrics),
                    "experiment": trainer.config.to_dict(),
                    "config_hash": trainer.config.config_hash()})
         listeners = [cb for cb in trainer.callbacks
@@ -256,8 +306,9 @@ def default_callbacks(cfg) -> list:
     tr = cfg.train
     cbs: list = [PreemptionCallback(tr.stop_after)]
     if tr.eval_every:
-        cbs.append(EvalCallback(tr.eval_every))
-    cbs.append(MetricsCallback(tr.metrics_path))
+        cbs.append(EvalCallback(tr.eval_every, sync=tr.sync_eval))
+    cbs.append(MetricsCallback(tr.metrics_path,
+                               flush_every=tr.metrics_flush_every))
     cbs.append(StragglerCallback())
     if tr.log_every:
         cbs.append(ConsoleCallback(tr.log_every))

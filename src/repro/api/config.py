@@ -74,16 +74,26 @@ class TrainConfig:
     # --- run environment (excluded from config_hash) ---
     log_every: int = 10
     eval_every: int = 0                 # 0 = no held-out evaluation
+    sync_eval: bool = False             # True: eval blocks inside the step
+                                        # loop (tests); False: side-stream
+                                        # dispatch, collected at the next
+                                        # eval boundary (same numbers)
     checkpoint_dir: Optional[str] = None
     checkpoint_every: int = 50
     metrics_path: Optional[str] = None  # JSONL telemetry stream
+    metrics_flush_every: int = 20       # rows per JSONL drain (host sync
+                                        # cadence of the async metrics path)
+    history_cap: int = 0                # >0: keep first + last N history
+                                        # rows in the report (0 = all)
     stop_after: Optional[int] = None    # simulate preemption after N steps
 
 
 # train fields that do not affect the optimization trajectory: two runs that
 # differ only here are the same experiment (same config_hash)
-_NONSEMANTIC_TRAIN_FIELDS = ("log_every", "eval_every", "checkpoint_dir",
-                             "checkpoint_every", "metrics_path", "stop_after")
+_NONSEMANTIC_TRAIN_FIELDS = ("log_every", "eval_every", "sync_eval",
+                             "checkpoint_dir", "checkpoint_every",
+                             "metrics_path", "metrics_flush_every",
+                             "history_cap", "stop_after")
 
 _SECTION_TYPES = {
     "model": ModelConfig,

@@ -2,6 +2,17 @@
 ``ExperimentConfig``, with every side effect (checkpointing, eval,
 telemetry, monitoring, early stop) delegated to ``Callback`` plugins.
 
+The loop is ASYNC with respect to the device queue: a step's metrics leave
+``run_step`` as device scalars and flow through ``on_step_end`` wrapped in
+a lazy :class:`~repro.launch.metrics.MetricsFuture` — nothing on the step
+path calls ``float()``, so the host keeps dispatching ahead (under
+``graft.overlap`` the next refresh too) while the device drains earlier
+steps. Materialization happens in bulk at flush boundaries (the
+``MetricsCallback`` logger), at console/checkpoint boundaries, and when the
+final report is assembled. ``last_step_time`` therefore times the step
+DISPATCH, not device execution — the honest host-side number; the logger
+reports the host-side gap on top of it as ``host_overhead_s``.
+
 Typical use::
 
     from repro.api import ExperimentConfig, Trainer
@@ -16,8 +27,9 @@ rides in the manifest::
 """
 from __future__ import annotations
 
+import collections
 import time
-from typing import Any, Dict, Iterable, Optional
+from typing import Any, Dict, Iterable, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -28,6 +40,48 @@ from repro.api.config import ExperimentConfig
 from repro.distributed import sharding as sh
 from repro.launch import steps as steps_lib
 from repro.launch.mesh import make_host_mesh
+from repro.launch.metrics import MetricsFuture, materialize_metrics
+
+
+class HistoryBuffer:
+    """Bounded per-step history: with ``cap > 0`` keeps the FIRST row plus
+    a tail window of the last ``cap`` rows (dropping the middle), so a
+    million-step run doesn't hold every row — and every retained
+    ``MetricsFuture`` — in host memory. ``cap == 0`` keeps everything
+    (the historical behavior)."""
+
+    def __init__(self, cap: int = 0):
+        self.cap = cap
+        self._first: Optional[Any] = None
+        self._tail: collections.deque = collections.deque(
+            maxlen=cap if cap > 0 else None)
+        self.total = 0
+
+    def append(self, row) -> None:
+        # rows falling off the tail window are dropped UNMATERIALIZED —
+        # a device future nobody will read again costs no sync
+        if self.total == 0 and self.cap > 0:
+            self._first = row
+        else:
+            self._tail.append(row)
+        self.total += 1
+
+    @property
+    def last(self):
+        if self._tail:
+            return self._tail[-1]
+        return self._first
+
+    @property
+    def dropped(self) -> int:
+        return self.total - len(self._tail) - \
+            (1 if self._first is not None else 0)
+
+    def rows(self) -> List[Dict[str, float]]:
+        """Materialized retained rows, oldest first."""
+        out = ([self._first] if self._first is not None else []) + \
+            list(self._tail)
+        return [materialize_metrics(r) for r in out]
 
 
 class Trainer:
@@ -94,19 +148,12 @@ class Trainer:
         tr = cfg.train
         self.mcfg, self.tcfg, self.data = cfg.build()
         mesh = make_host_mesh()
-        if self.tcfg.use_graft and self.tcfg.graft.overlap:
-            # refresh and train step as separate dispatches: the selection
-            # forward pipelines with the train stream (same trajectory)
-            from repro.selection.overlap import OverlappedSelector
-            run_step = OverlappedSelector(self.mcfg, self.tcfg).step
-        else:
-            step_fn = steps_lib.make_train_step(self.mcfg, self.tcfg)
-            jitted = jax.jit(step_fn, donate_argnums=(0,))
+        run_step = steps_lib.make_run_step(self.mcfg, self.tcfg)
 
-            def run_step(state, batch, step):
-                return jitted(state, batch)
-
-        history = []
+        history = HistoryBuffer(cap=tr.history_cap)
+        dispatched_ahead = 0
+        dispatch_s = 0.0
+        prev_row: Optional[MetricsFuture] = None
         with sh.sharding_rules(mesh):
             self.state = steps_lib.init_train_state(
                 self.mcfg, self.tcfg, jax.random.PRNGKey(tr.seed), tr.batch)
@@ -123,20 +170,35 @@ class Trainer:
                 batch_np = next(it)
                 batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
                 t0 = time.time()
-                self.state, metrics = run_step(self.state, batch, step)
-                metrics = {k: float(v) for k, v in metrics.items()}
+                self.state, dev_metrics = run_step(self.state, batch, step)
                 self.last_step_time = time.time() - t0
+                dispatch_s += self.last_step_time
+                # dispatch accounting: run_step returning means step N is
+                # ISSUED; if step N−1's metrics are still device futures at
+                # that point, the host ran ahead of the device queue
+                if prev_row is not None and not prev_row.materialized:
+                    dispatched_ahead += 1
+                metrics = MetricsFuture(dev_metrics)
+                prev_row = metrics
                 self._fire("on_step_end", step, metrics)
                 history.append(metrics)
                 if self.should_stop:
                     break
             wall = time.time() - t_start
+            last = history.last
             report: Dict[str, Any] = {
-                "final_loss": history[-1]["loss"] if history else None,
-                "history": history,
+                "final_loss": last["loss"] if last is not None else None,
+                "history": history.rows(),
                 "wall_s": wall,
                 "config_hash": cfg.config_hash(),
+                "host_loop": {
+                    "steps": history.total,
+                    "dispatched_ahead": dispatched_ahead,
+                    "dispatch_s": dispatch_s,
+                },
             }
+            if history.dropped:
+                report["history_dropped"] = history.dropped
             if self.stop_reason is not None:
                 report["stopped"] = self.stop_reason
             self._fire("on_train_end", report)

@@ -7,11 +7,20 @@ the training distribution but never overlap the train stream (generators
 are seeded per (seed, step, example) — disjoint step spaces). The metric
 family comes from the source's task adapter: ``lm`` sources report
 perplexity, ``classification`` sources report accuracy.
+
+Every factory returns an :class:`EvalFn` with a dispatch/collect split so
+eval can run as a NON-BLOCKING side stream: ``dispatch(params)`` enqueues
+the jitted per-batch evals plus the on-device reduction and returns a dict
+of device scalars without syncing the host; ``collect(handle)`` is the
+explicit materialization point. Calling the object (``eval_fn(params)``)
+keeps the legacy synchronous semantics — dispatch + collect in one go.
+Both paths run the identical device computation, so sync and async eval
+produce bit-identical numbers.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
+from typing import Any, Callable, Dict
 
 import jax
 import jax.numpy as jnp
@@ -26,8 +35,35 @@ EVAL_STEP_OFFSET = 7_777_777
 EVAL_SEED_OFFSET = EVAL_STEP_OFFSET          # back-compat alias
 
 
+class EvalFn:
+    """Held-out eval with an explicit dispatch/collect split.
+
+    ``dispatch`` enqueues against the LIVE ``params`` buffers — under a
+    donating train loop this is safe exactly when the dispatch happens
+    before the next donating step is issued (the side-stream discipline of
+    ``repro.selection.overlap``): PjRt usage events then order the eval
+    reads ahead of the buffer reuse, with no host copy of the params.
+    """
+
+    def __init__(self, dispatch_fn: Callable[[Any], Dict[str, jax.Array]]):
+        self._dispatch = dispatch_fn
+
+    def dispatch(self, params) -> Dict[str, jax.Array]:
+        """Enqueue the full eval (per-batch jits + on-device reduction);
+        returns device scalars, never blocks the host."""
+        return self._dispatch(params)
+
+    @staticmethod
+    def collect(handle: Dict[str, jax.Array]) -> Dict[str, float]:
+        """Materialize a dispatched handle to host floats (blocks)."""
+        return {k: float(v) for k, v in handle.items()}
+
+    def __call__(self, params) -> Dict[str, float]:
+        return self.collect(self.dispatch(params))
+
+
 def make_eval_fn(mcfg: model_lib.ModelConfig, batch: int, seq: int,
-                 seed: int = 0, num_batches: int = 4):
+                 seed: int = 0, num_batches: int = 4) -> EvalFn:
     """LM-source eval (the legacy entry point; kept for ad-hoc scripts)."""
     data = SyntheticLM(DataConfig(vocab_size=mcfg.vocab_size, seq_len=seq,
                                   global_batch=batch, seed=seed))
@@ -35,21 +71,22 @@ def make_eval_fn(mcfg: model_lib.ModelConfig, batch: int, seq: int,
                            for i in range(num_batches)])
 
 
-def _lm_eval(mcfg: model_lib.ModelConfig, eval_batches):
+def _lm_eval(mcfg: model_lib.ModelConfig, eval_batches) -> EvalFn:
     @jax.jit
     def one(params, batch):
         loss, _ = model_lib.loss_fn(mcfg, params, batch)
         return loss
 
-    def evaluate(params) -> Dict[str, float]:
-        losses = [float(one(params, _device_batch(b))) for b in eval_batches]
-        mean = sum(losses) / len(losses)
-        return {"eval_loss": mean, "eval_ppl": float(jnp.exp(mean))}
+    staged = [_device_batch(b) for b in eval_batches]   # staged once
 
-    return evaluate
+    def dispatch(params) -> Dict[str, jax.Array]:
+        mean = jnp.mean(jnp.stack([one(params, b) for b in staged]))
+        return {"eval_loss": mean, "eval_ppl": jnp.exp(mean)}
+
+    return EvalFn(dispatch)
 
 
-def _classification_eval(mcfg: model_lib.ModelConfig, eval_batches):
+def _classification_eval(mcfg: model_lib.ModelConfig, eval_batches) -> EvalFn:
     @jax.jit
     def one(params, batch):
         h, mask = model_lib.forward_hiddens(mcfg, params, batch)
@@ -62,13 +99,14 @@ def _classification_eval(mcfg: model_lib.ModelConfig, eval_batches):
         hit = (jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32)
         return loss, jnp.sum(hit * mask) / denom
 
-    def evaluate(params) -> Dict[str, float]:
-        pairs = [one(params, _device_batch(b)) for b in eval_batches]
-        n = len(pairs)
-        return {"eval_loss": sum(float(l) for l, _ in pairs) / n,
-                "eval_acc": sum(float(a) for _, a in pairs) / n}
+    staged = [_device_batch(b) for b in eval_batches]
 
-    return evaluate
+    def dispatch(params) -> Dict[str, jax.Array]:
+        pairs = [one(params, b) for b in staged]
+        return {"eval_loss": jnp.mean(jnp.stack([l for l, _ in pairs])),
+                "eval_acc": jnp.mean(jnp.stack([a for _, a in pairs]))}
+
+    return EvalFn(dispatch)
 
 
 def _device_batch(b):
@@ -76,7 +114,7 @@ def _device_batch(b):
 
 
 def make_eval_fn_for(experiment, mcfg: model_lib.ModelConfig,
-                     num_batches: int = 4):
+                     num_batches: int = 4) -> EvalFn:
     """Eval fn for a ``repro.api.ExperimentConfig`` — one place owns the
     eval-batch policy (≤8 examples per batch, seed shifted out of the train
     stream) so the EvalCallback and ad-hoc scripts agree, for EVERY

@@ -1,23 +1,35 @@
 """Training telemetry: JSONL metrics stream + throughput/MFU tracking.
 
-Production habits kept: append-only JSONL (greppable), host-side only (no
-device sync beyond the metrics already materialized by the step), analytic
-FLOPs/step so MFU is reported against the 197 TFLOP/s bf16 peak.
+Production habits kept: append-only JSONL (greppable), host-side only, and
+— since the async host loop — NO device sync on the step path at all. The
+trainer hands each step's metrics over as a :class:`MetricsFuture` (a
+mapping over still-in-flight device scalars); the logger stamps the
+host-side fields (wall time, tokens_seen, step timing) at ``log`` time but
+defers the device→host materialization to the flush boundary, so the host
+keeps dispatching ahead of the device between flushes.
 
-Rows are BUFFERED: one logical row per step, but the host write syscall
-happens only every ``flush_every`` rows (and on ``flush``/``close``), so at
-production step times the telemetry stream never stalls the step loop on
-file I/O. The trade: crash-safety is BOUNDED, not per-row — a hard kill
+Rows are BUFFERED: one logical row per step, but materialization + the
+write syscall happen only every ``flush_every`` rows (and on ``flush``/
+``close``). The trade: crash-safety is BOUNDED, not per-row — a hard kill
 between flushes drops at most the last ``flush_every − 1`` rows (a clean
-stop, including preemption via ``EmergencySaver``, drains the buffer through
-``close``). Set ``flush_every=1`` to restore per-row durability.
+stop, including preemption via ``EmergencySaver``, drains the buffer
+through ``close``). Set ``flush_every=1`` to restore per-row durability.
+
+Step timing is HONEST: ``step_time_s`` is the duration the caller measured
+around the step dispatch itself (``step_time=``), not the wall time between
+``log`` calls — so an eval or checkpoint pause between steps no longer
+contaminates the next step's ``mfu``/``tokens_per_s``. The host-side gap on
+top of the dispatch is reported separately as ``host_overhead_s``. Callers
+that don't pass ``step_time`` keep the legacy between-calls clock.
 """
 from __future__ import annotations
 
 import json
 import os
 import time
-from typing import Any, Dict, Optional
+from typing import Any, Dict, Iterator, Mapping, MutableMapping, Optional
+
+import jax
 
 PEAK_FLOPS_PER_CHIP = 197e12
 
@@ -29,6 +41,81 @@ def train_step_flops(num_params: int, tokens_per_step: int,
     return base * (8.0 / 6.0) if remat else base
 
 
+class MetricsFuture(MutableMapping):
+    """One step's metrics as unmaterialized device scalars.
+
+    Behaves like a dict (callbacks may mutate it in place, per the
+    ``on_step_end`` contract), but ``float()``-ing the values — the
+    host↔device sync — is deferred until someone actually reads one
+    (``[]``/``items``) or calls :meth:`materialize`. Key-level operations
+    (``in``, ``keys``, ``len``, assignment) never sync, so callbacks can
+    route on the row shape without stalling the dispatch queue. ``update``
+    merges more values in (the eval side stream injects its device scalars
+    here, tagged to the step they were dispatched at).
+    """
+
+    __slots__ = ("_data", "_ready")
+
+    def __init__(self, data: Optional[Mapping[str, Any]] = None):
+        self._data: Dict[str, Any] = dict(data) if data else {}
+        self._ready = False
+
+    # -- key-level ops: never sync --------------------------------------
+    def __iter__(self) -> Iterator[str]:
+        return iter(self._data)
+
+    def __len__(self) -> int:
+        return len(self._data)
+
+    def __contains__(self, key) -> bool:
+        return key in self._data
+
+    def keys(self):
+        return self._data.keys()
+
+    @property
+    def materialized(self) -> bool:
+        return self._ready
+
+    def __setitem__(self, key: str, value: Any) -> None:
+        self._data[key] = value
+        if self._ready:              # keep the materialized invariant
+            self._ready = False
+            self.materialize()
+
+    def __delitem__(self, key: str) -> None:
+        del self._data[key]
+
+    # -- value-level ops: sync ------------------------------------------
+    def __getitem__(self, key: str) -> float:
+        return self.materialize()[key]
+
+    def materialize(self) -> Dict[str, float]:
+        """Pull every value to the host as a plain float (cached)."""
+        if not self._ready:
+            self._data = {k: float(v)
+                          for k, v in jax.device_get(self._data).items()}
+            self._ready = True
+        return self._data
+
+    def update(self, other: Mapping[str, Any]) -> None:
+        if isinstance(other, MetricsFuture):
+            other = other._data
+        self._data.update(other)
+        if self._ready:                  # keep the materialized invariant
+            self._ready = False
+            self.materialize()
+
+
+def materialize_metrics(metrics: Mapping[str, Any]) -> Dict[str, float]:
+    """Plain ``{k: float}`` from a MetricsFuture or an eager dict — the one
+    sync point for consumers that need host values NOW (checkpoint
+    manifests, console lines, reports)."""
+    if isinstance(metrics, MetricsFuture):
+        return metrics.materialize()
+    return {k: float(v) for k, v in metrics.items()}
+
+
 class MetricsLogger:
     def __init__(self, path: Optional[str] = None, num_chips: int = 1,
                  flops_per_step: Optional[float] = None,
@@ -38,50 +125,78 @@ class MetricsLogger:
         self.flops_per_step = flops_per_step
         self.flush_every = max(1, flush_every)
         self._f = open(path, "a") if path else None
-        self._buf: list = []
+        # pending rows: (host-side fields, metrics mapping) pairs; device
+        # values are materialized only when the pair is drained
+        self._pending: list = []
         self._last_t: Optional[float] = None
         self.tokens_seen = 0
+        self.drain_s = 0.0               # cumulative time spent materializing
 
-    def log(self, step: int, metrics: Dict[str, Any],
-            tokens: int = 0) -> Dict[str, Any]:
+    def log(self, step: int, metrics: Mapping[str, Any], tokens: int = 0,
+            step_time: Optional[float] = None) -> Dict[str, Any]:
+        """Queue one row. Host-side fields (time, tokens_seen, timing) are
+        stamped NOW; device values drain at the next flush boundary.
+
+        ``step_time`` is the caller's measurement around the step dispatch
+        (``Trainer.last_step_time``); when given, throughput/MFU are
+        computed from it and the extra host-side gap between ``log`` calls
+        lands in ``host_overhead_s``. Without it, the legacy between-calls
+        clock is used (which smears eval/checkpoint pauses into the next
+        step — pass ``step_time`` for honest numbers).
+        """
         now = time.time()
-        row = {"step": step, "time": now, **{k: float(v)
-                                             for k, v in metrics.items()}}
+        base: Dict[str, Any] = {"step": step, "time": now}
         if tokens:
             self.tokens_seen += tokens
-            row["tokens_seen"] = self.tokens_seen
-        if self._last_t is not None:
-            dt = now - self._last_t
-            row["step_time_s"] = dt
-            if tokens and dt > 0:
-                row["tokens_per_s"] = tokens / dt
-            if self.flops_per_step and dt > 0:
-                row["mfu"] = (self.flops_per_step /
-                              (dt * self.num_chips * PEAK_FLOPS_PER_CHIP))
+            base["tokens_seen"] = self.tokens_seen
+        gap = (now - self._last_t) if self._last_t is not None else None
+        dt = step_time if step_time is not None else gap
+        if dt is not None and dt > 0:
+            base["step_time_s"] = dt
+            if tokens:
+                base["tokens_per_s"] = tokens / dt
+            if self.flops_per_step:
+                base["mfu"] = (self.flops_per_step /
+                               (dt * self.num_chips * PEAK_FLOPS_PER_CHIP))
+            if step_time is not None and gap is not None:
+                base["host_overhead_s"] = max(0.0, gap - step_time)
         self._last_t = now
         if self._f:
-            self._buf.append(json.dumps(row))
-            if len(self._buf) >= self.flush_every:
+            # no stream, no queue: without a file the row would only be
+            # materialized to be thrown away — leave the futures untouched
+            self._pending.append((base, metrics))
+            if len(self._pending) >= self.flush_every:
                 self.flush()
-        return row
+        return base
 
     def flush(self):
-        """Drain the row buffer to disk (called automatically every
-        ``flush_every`` rows and on ``close``)."""
-        if self._f and self._buf:
-            self._f.write("\n".join(self._buf) + "\n")
+        """Drain the pending rows: materialize device values (the only
+        host↔device sync in the logger) and write the JSONL block."""
+        if not self._pending:
+            return
+        t0 = time.time()
+        lines = []
+        for base, metrics in self._pending:
+            row = dict(base)
+            row.update(materialize_metrics(metrics))
+            lines.append(json.dumps(row))
+        self._pending.clear()
+        self.drain_s += time.time() - t0
+        if self._f:
+            self._f.write("\n".join(lines) + "\n")
             self._f.flush()
-            self._buf.clear()
 
     def close(self):
+        self.flush()
         if self._f:
-            self.flush()
             self._f.close()
 
 
-def format_step_line(step: int, metrics: Dict[str, Any], dt: float,
+def format_step_line(step: int, metrics: Mapping[str, Any], dt: float,
                      use_graft: bool = False) -> str:
-    """One console progress line (the ConsoleCallback / legacy-loop format)."""
+    """One console progress line (the ConsoleCallback / legacy-loop format).
+    Materializes ``metrics`` — only call for rows actually printed."""
+    metrics = materialize_metrics(metrics)
     extra = (f" rank={metrics.get('rank', 0):.0f}"
              f" align={metrics.get('alignment', 0):.3f}" if use_graft else "")
     return (f"[train] step {step:5d} loss {metrics['loss']:.4f} "

@@ -293,6 +293,50 @@ def make_train_step(mcfg, tcfg: TrainConfig, kind: Optional[str] = None):
     return fn
 
 
+def detach_metrics(metrics):
+    """Fresh buffers for metric scalars (tiny async copies, no sync).
+
+    A metric that PASSES THROUGH a donating jit untouched (e.g. the graft
+    ``rank`` between refreshes) comes back aliased to the donated input
+    buffer, which the NEXT step's donation recycles — a deferred read
+    (``MetricsFuture`` drained at a flush boundary) would then hit a
+    deleted array. The copies are enqueued before that next dispatch, so
+    PjRt orders them ahead of the buffer reuse."""
+    return {k: jnp.copy(v) if isinstance(v, jax.Array) else v
+            for k, v in metrics.items()}
+
+
+def make_run_step(mcfg, tcfg: TrainConfig, donate: bool = True):
+    """Uniform host-callable ``(state, batch, step) → (state, metrics)`` —
+    the one place that owns the jit/donation wiring for the training loop.
+
+    Resolves to the :class:`~repro.selection.overlap.OverlappedSelector`
+    when ``graft.overlap`` is set (refresh and subset-train as separate,
+    pipelined dispatches), else a single donated jit of the sequential
+    step. Either way the returned metrics are DEVICE scalars of a
+    still-in-flight dispatch: callers that want the host to run ahead must
+    not ``float()`` them per step (the ``Trainer`` wraps them in a
+    ``MetricsFuture`` and drains at flush boundaries). Side computations
+    on ``state['params']`` (eval, refresh) must follow the
+    ``SideStream`` discipline: enqueue before the next call donates.
+    """
+    if tcfg.use_graft and tcfg.graft.overlap:
+        from repro.selection.overlap import OverlappedSelector
+        inner = OverlappedSelector(mcfg, tcfg, donate=donate).step
+    else:
+        jitted = jax.jit(make_train_step(mcfg, tcfg),
+                         donate_argnums=(0,) if donate else ())
+
+        def inner(state, batch, step):
+            return jitted(state, batch)
+
+    def run_step(state, batch, step):
+        state, metrics = inner(state, batch, step)
+        return state, detach_metrics(metrics)
+
+    return run_step
+
+
 # ---------------------------------------------------------------------------
 # serve steps
 # ---------------------------------------------------------------------------

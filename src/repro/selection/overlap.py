@@ -28,10 +28,53 @@ declaratively with ``ExperimentConfig.graft.overlap = True`` (excluded from
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+
+
+class SideStream:
+    """At-most-one-in-flight side dispatch against soon-to-be-donated
+    buffers — the double-buffer discipline shared by the
+    :class:`OverlappedSelector` refresh and the ``EvalCallback``'s deferred
+    held-out eval.
+
+    The rule both obey: a side computation that reads ``state['params']``
+    must be ENQUEUED before the next donating train dispatch is issued.
+    PjRt usage events then order the side reads ahead of the buffer reuse,
+    so the side stream consumes the live params with no host copy and no
+    sync. Holding at most ONE pending handle is the double buffer: a new
+    ``launch`` first drains (blocks on) the previous handle, bounding both
+    device memory and how far results can trail their dispatch step.
+    """
+
+    def __init__(self):
+        self._tag: Any = None
+        self._handle: Any = None
+
+    @property
+    def pending(self) -> bool:
+        return self._handle is not None
+
+    def launch(self, tag: Any, handle: Any) -> Optional[Tuple[Any, Any]]:
+        """Register a freshly-dispatched handle; returns the drained
+        ``(tag, handle)`` of the previous launch (or ``None``)."""
+        prev = self.drain()
+        self._tag, self._handle = tag, handle
+        return prev
+
+    def drain(self, block: bool = True) -> Optional[Tuple[Any, Any]]:
+        """Hand back the pending ``(tag, handle)``, blocking until its
+        device work is done (it almost always already is — a full
+        inter-boundary window of train steps has been dispatched since)."""
+        if self._handle is None:
+            return None
+        tag, handle = self._tag, self._handle
+        self._tag = self._handle = None
+        if block:
+            jax.block_until_ready(handle)
+        return tag, handle
 
 
 class OverlappedSelector:
@@ -71,4 +114,4 @@ class OverlappedSelector:
                                alignment=g.alignment)
 
 
-__all__ = ["OverlappedSelector"]
+__all__ = ["OverlappedSelector", "SideStream"]

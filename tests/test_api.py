@@ -223,6 +223,83 @@ class TestTrainerLifecycle:
         assert any("eval_ppl" in h for h in report["history"])
 
 
+# JSONL fields that legitimately differ between two otherwise-identical
+# runs: wall clocks and everything derived from them
+_TIMING_FIELDS = ("time", "step_time_s", "tokens_per_s", "mfu",
+                  "host_overhead_s")
+
+
+def _strip_timing(rows):
+    return [{k: v for k, v in r.items() if k not in _TIMING_FIELDS}
+            for r in rows]
+
+
+class TestAsyncHostLoop:
+    """The async host loop (deferred metrics + side-stream eval) must be a
+    pure dispatch-schedule change: bit-identical trajectory and JSONL
+    stream (modulo timing fields) vs the synchronous escape hatches."""
+
+    def test_async_trajectory_and_jsonl_match_sync(self, tmp_path):
+        """The full async stack (graft.overlap dispatch schedule +
+        side-stream eval + deferred metrics drain) vs the fully synchronous
+        loop (sequential dispatch, blocking eval, per-row flush)."""
+        ap, sp = str(tmp_path / "async.jsonl"), str(tmp_path / "sync.jsonl")
+        r_async = Trainer(small_cfg(eval_every=3, metrics_path=ap,
+                                    metrics_flush_every=4)
+                          .apply_overrides(["graft.overlap=true"])).fit()
+        r_sync = Trainer(small_cfg(eval_every=3, metrics_path=sp,
+                                   sync_eval=True,
+                                   metrics_flush_every=1)).fit()
+        assert r_async["final_loss"] == r_sync["final_loss"]
+        assert [h["loss"] for h in r_async["history"]] == \
+            [h["loss"] for h in r_sync["history"]]
+        assert _strip_timing(read_metrics(ap)) == \
+            _strip_timing(read_metrics(sp))
+
+    def test_deferred_eval_rows_tagged_with_dispatch_step(self, tmp_path):
+        """Side-stream eval results land on the row of the step they were
+        DISPATCHED at, even though they are collected at the next boundary
+        (or close)."""
+        mpath = str(tmp_path / "m.jsonl")
+        Trainer(small_cfg(eval_every=3, metrics_path=mpath,
+                          metrics_flush_every=100)).fit()  # drain only at close
+        rows = read_metrics(mpath)
+        assert [r["step"] for r in rows if "eval_loss" in r] == [2, 5]
+        assert all(isinstance(r["eval_ppl"], float)
+                   for r in rows if "eval_loss" in r)
+
+    def test_flush_drains_on_preemption_stop(self, tmp_path):
+        """A stop_after kill with a flush cadence longer than the run must
+        still land EVERY queued row on disk — the clean-stop path drains
+        the lazy buffer through close."""
+        mpath = str(tmp_path / "m.jsonl")
+        report = Trainer(small_cfg(steps=8, stop_after=4, eval_every=2,
+                                   metrics_path=mpath,
+                                   metrics_flush_every=100)).fit()
+        assert report["stopped"] == "stop_after"
+        rows = read_metrics(mpath)
+        assert [r["step"] for r in rows] == [0, 1, 2, 3]
+        assert all(np.isfinite(r["loss"]) for r in rows)
+
+    def test_host_dispatches_ahead_of_materialization(self):
+        """With deferred metrics the loop must issue step N+1 while step
+        N's metrics are still device futures (the dispatch accounting the
+        bench gates)."""
+        report = Trainer(small_cfg(metrics_flush_every=100)).fit()
+        assert report["host_loop"]["steps"] == 6
+        assert report["host_loop"]["dispatched_ahead"] >= 4
+
+    def test_history_cap_keeps_first_and_tail(self):
+        report = Trainer(small_cfg(steps=8, history_cap=3)).fit()
+        hist = report["history"]
+        assert len(hist) == 4                        # first + tail window
+        assert report["history_dropped"] == 4
+        full = Trainer(small_cfg(steps=8)).fit()
+        assert [h["loss"] for h in hist] == \
+            [full["history"][i]["loss"] for i in (0, 5, 6, 7)]
+        assert report["final_loss"] == full["final_loss"]
+
+
 class TestResumeFromManifest:
     def test_resume_reconstructs_config_and_metrics(self, tmp_path):
         """Kill via stop_after → resume from the manifest-embedded config
@@ -249,6 +326,25 @@ class TestResumeFromManifest:
                           checkpoint_every=100)).fit()
         report = resume(ck)
         assert len(report["history"]) == 2
+
+    def test_resume_restores_tokens_seen(self, tmp_path):
+        """Regression: the resumed run's fresh MetricsLogger restarted
+        tokens_seen at zero, corrupting cumulative-token and MFU history —
+        it must continue from start_step × tokens_per_step."""
+        ck = str(tmp_path / "ck")
+        tokens_per_step = SMALL["batch"] * SMALL["seq"]
+        mpath = str(tmp_path / "metrics.jsonl")
+        Trainer(small_cfg(steps=8, stop_after=4, checkpoint_dir=ck,
+                          checkpoint_every=100, metrics_path=mpath)).fit()
+        assert read_metrics(mpath)[-1]["tokens_seen"] == 4 * tokens_per_step
+        # the manifest carries metrics_path: the resumed run appends to the
+        # same JSONL stream, and the cumulative counter must pick up at
+        # start_step × tokens_per_step, not restart at zero
+        Trainer.from_checkpoint(ck).fit()
+        rows = read_metrics(mpath)
+        assert [r["step"] for r in rows] == [0, 1, 2, 3, 4, 5, 6, 7]
+        assert [r["tokens_seen"] for r in rows] == \
+            [t * tokens_per_step for t in range(1, 9)]
 
     def test_resume_dump_config_does_not_train(self, tmp_path, capsys):
         from repro.api.cli import main

@@ -330,6 +330,48 @@ class TestMetricsAndEval:
         assert [r["step"] for r in rows] == [0, 1, 2, 3]
         assert rows[3]["loss"] == 4.0
 
+    def test_step_time_isolated_from_host_pauses(self, tmp_path):
+        """Regression: step_time_s/mfu/tokens_per_s came from the wall gap
+        between log calls, so an eval/checkpoint pause between steps
+        cratered the NEXT step's MFU. With step_time passed, throughput is
+        computed from the dispatch clock and the pause lands in
+        host_overhead_s instead."""
+        import time as time_mod
+        from repro.launch.metrics import MetricsLogger, read_metrics
+        path = str(tmp_path / "t.jsonl")
+        lg = MetricsLogger(path, num_chips=1, flops_per_step=1e12,
+                           flush_every=1)
+        lg.log(0, {"loss": 2.0}, tokens=100, step_time=0.01)
+        time_mod.sleep(0.08)                  # simulated eval pause
+        lg.log(1, {"loss": 1.9}, tokens=100, step_time=0.01)
+        lg.close()
+        rows = read_metrics(path)
+        for r in rows:
+            assert r["step_time_s"] == pytest.approx(0.01)
+            assert r["tokens_per_s"] == pytest.approx(100 / 0.01)
+        assert rows[1]["host_overhead_s"] >= 0.05   # the pause, separated
+        assert rows[1]["mfu"] == pytest.approx(
+            1e12 / (0.01 * 197e12), rel=1e-6)
+
+    def test_lazy_rows_materialize_at_flush(self, tmp_path):
+        """MetricsFuture rows queue without a device sync; the flush
+        boundary is the one materialization point."""
+        import jax.numpy as jnp
+        from repro.launch.metrics import (MetricsFuture, MetricsLogger,
+                                          read_metrics)
+        path = str(tmp_path / "lazy.jsonl")
+        lg = MetricsLogger(path, flush_every=3)
+        futs = [MetricsFuture({"loss": jnp.float32(i)}) for i in range(3)]
+        lg.log(0, futs[0])
+        lg.log(1, futs[1])
+        assert not futs[0].materialized and not futs[1].materialized
+        assert "loss" in futs[0]              # key checks never sync
+        assert not futs[0].materialized
+        lg.log(2, futs[2])                    # flush boundary drains all
+        assert all(f.materialized for f in futs)
+        assert [r["loss"] for r in read_metrics(path)] == [0.0, 1.0, 2.0]
+        lg.close()
+
     def test_eval_stream_disjoint_and_ppl(self):
         from repro import configs
         from repro.launch.evaluate import make_eval_fn
