@@ -17,7 +17,14 @@ This suite is also the repo's perf gate for the selection hot path:
     issued while step N's metrics are still device futures. The counter is
     deterministic for a fixed config (materialization happens only at flush
     boundaries), so it is gated like the dispatch counts; ``blocked_ms`` is
-    wall clock and recorded but not gated.
+    wall clock and recorded but not gated. The same probe now also gates
+    DeviceClock coverage (every step but the first gets a device-time
+    stamp) and device-sourced ``mfu`` in the flushed metrics;
+  * attention hot path — with ``attn_backend=flash`` the model forward must
+    trace to exactly ONE ``pallas_call`` per layer (layers unrolled so the
+    count is per-layer, not per scan body); compiled train-step FLOPs
+    (flash vs dense jnp path) and the analytic ``train_step_flops``
+    estimate ride along for the regression diff.
 
 Run standalone to emit machine-readable results (tracked across PRs by the
 ``perf-smoke`` CI job)::
@@ -100,10 +107,13 @@ def _host_stall_entry() -> Dict[str, Any]:
     deferred metrics) and report the dispatch-ahead depth: how many steps
     were issued while the previous step's metrics were still device
     futures. Drains happen only at metrics flush boundaries, so for this
-    fixed config the counter is deterministic (steps − flush drains − 1)."""
+    fixed config the counter is deterministic (steps − flush drains − 1).
+    Also reports the DeviceClock coverage: every step but the first must
+    get a device-time stamp, and the JSONL ``mfu`` must be device-sourced."""
     import tempfile
 
     from repro.api import ExperimentConfig, Trainer
+    from repro.launch.metrics import read_metrics
 
     with tempfile.TemporaryDirectory() as td:
         cfg = ExperimentConfig().apply_overrides([
@@ -115,12 +125,78 @@ def _host_stall_entry() -> Dict[str, Any]:
             "graft.overlap=true",
         ])
         report = Trainer(cfg).fit()
+        mrows = read_metrics(f"{td}/m.jsonl")
     h = report["host_loop"]
+    dev_rows = [r for r in mrows if r.get("mfu_source") == "device"]
     return {
         "steps": h["steps"],
         "dispatch_ahead_steps": h["dispatched_ahead"],
         "blocked_ms_per_step": (1e3 * h.get("metrics_drain_s", 0.0)
                                 / max(h["steps"], 1)),
+        "device_timed_steps": h.get("device_timed_steps", 0),
+        "device_time_s": h.get("device_time_s", 0.0),
+        "mfu_source": "device" if dev_rows else "dispatch",
+        "mfu_device_rows": len(dev_rows),
+        "mfu": dev_rows[-1]["mfu"] if dev_rows else None,
+    }
+
+
+_ATTN_LAYERS = 2                         # attention-gate probe model (fixed:
+_ATTN_B, _ATTN_S = 4, 64                 # dispatch counts are exact gates)
+
+
+def _attention_entry() -> Dict[str, Any]:
+    """Model-hot-path accounting for ``attn_backend=flash``: the forward
+    jaxpr must dispatch exactly ONE ``pallas_call`` per layer (the layers
+    are unrolled here so per-layer really means per layer, not per scan
+    body), and the compiled train-step FLOPs ride along for the regression
+    diff (flash vs the dense jnp path on the same shapes)."""
+    from repro.launch.metrics import train_step_flops
+    from repro.models import model as model_lib
+
+    rng = np.random.default_rng(0)
+
+    def mk(backend: str):
+        return model_lib.ModelConfig(
+            family="dense", num_layers=_ATTN_LAYERS, d_model=64, num_heads=4,
+            num_kv_heads=2, head_dim=16, d_ff=128, vocab_size=256,
+            param_dtype="float32", scan_layers=False, attn_backend=backend)
+
+    cfg_f, cfg_d = mk("flash"), mk("dense")
+    params = model_lib.init_params(cfg_f, jax.random.PRNGKey(0))
+    batch = {
+        "tokens": jnp.asarray(
+            rng.integers(0, 256, (_ATTN_B, _ATTN_S)).astype(np.int32)),
+        "labels": jnp.asarray(
+            rng.integers(0, 256, (_ATTN_B, _ATTN_S)).astype(np.int32)),
+    }
+
+    def fwd(p, b):
+        return model_lib.loss_fn(cfg_f, p, b)[0]
+
+    def step(cfg):
+        def f(p, b):
+            return jax.grad(lambda pp: model_lib.loss_fn(cfg, pp, b)[0])(p)
+        return f
+
+    fwd_counts = _count_primitives(fwd, params, batch)
+    step_counts = _count_primitives(step(cfg_f), params, batch)
+    num_params = sum(int(np.prod(l.shape))
+                     for l in jax.tree_util.tree_leaves(params))
+    tokens = _ATTN_B * _ATTN_S
+    return {
+        "layers": _ATTN_LAYERS,
+        "forward_pallas_call": fwd_counts.get("pallas_call", 0),
+        "train_step_pallas_call": step_counts.get("pallas_call", 0),
+        "train_step_flops": {
+            "flash": _flops(step(cfg_f), params, batch),
+            "dense": _flops(step(cfg_d), params, batch),
+        },
+        "analytic_train_flops": {
+            "param_only": train_step_flops(num_params, tokens),
+            "with_attention": train_step_flops(num_params, tokens,
+                                               mcfg=cfg_f, seq=_ATTN_S),
+        },
     }
 
 
@@ -244,6 +320,22 @@ def collect(quick: bool = False) -> Tuple[List[str], Dict[str, Any]]:
         f";blocked_ms_per_step={stall['blocked_ms_per_step']:.3f}"))
 
     # ------------------------------------------------------------------
+    # model hot path: flash attention dispatch + train-step FLOPs
+    # ------------------------------------------------------------------
+    attn = _attention_entry()
+    report["attention"] = attn
+    rows.append(csv_row(
+        "attention_dispatch", 0.0,
+        f"forward_pallas_calls={attn['forward_pallas_call']}"
+        f"/{attn['layers']}layers"
+        f";train_step_pallas_calls={attn['train_step_pallas_call']}"))
+    rows.append(csv_row(
+        "attention_train_flops", 0.0,
+        f"flash={attn['train_step_flops']['flash']:.3e}"
+        f";dense={attn['train_step_flops']['dense']:.3e}"
+        f";analytic={attn['analytic_train_flops']['with_attention']:.3e}"))
+
+    # ------------------------------------------------------------------
     # every registered sampler through the engine on identical inputs
     # ------------------------------------------------------------------
     K, dv, Rv = 256, 1024, 32
@@ -303,6 +395,21 @@ def check(report: Dict[str, Any]) -> List[str]:
             "async host loop never dispatched ahead of metrics "
             f"materialization: {stall} — a float()/sync crept back onto "
             "the per-step path")
+    if stall.get("device_timed_steps", 0) != stall["steps"] - 1:
+        problems.append(
+            f"DeviceClock timed {stall.get('device_timed_steps')} steps, "
+            f"expected {stall['steps'] - 1} (every step but the first) — "
+            "completion stamps are being dropped")
+    if stall.get("mfu_source") != "device":
+        problems.append(
+            f"flushed metrics mfu_source={stall.get('mfu_source')!r}, "
+            "expected 'device' — mfu fell back to the dispatch clock")
+    attn = report.get("attention", {})
+    if attn.get("forward_pallas_call") != attn.get("layers"):
+        problems.append(
+            f"flash forward dispatches {attn.get('forward_pallas_call')} "
+            f"pallas_call for {attn.get('layers')} layers — must be exactly "
+            "one kernel launch per layer")
     return problems
 
 
@@ -316,8 +423,10 @@ def main(argv=None) -> int:
     ap.add_argument("--check", action="store_true",
                     help="exit non-zero if the perf gate regresses (fused "
                          "refresh != 1 pallas_call, batched != 1 launch, "
-                         f"sketch_svd FLOPs win < {_MIN_FLOPS_RATIO}x, or "
-                         "the async host loop never dispatches ahead)")
+                         f"sketch_svd FLOPs win < {_MIN_FLOPS_RATIO}x, "
+                         "the async host loop never dispatches ahead, "
+                         "flash attention != 1 pallas_call per layer, or "
+                         "DeviceClock coverage/mfu sourcing slips)")
     args = ap.parse_args(argv)
     rows, report = collect(quick=args.quick)
     for r in rows:

@@ -13,7 +13,13 @@ Hardware-independent fields only:
     dispatch-ahead depth (steps issued while the previous step's metrics
     were still device futures) must never DECREASE: it is a deterministic
     counter for the bench's fixed flush cadence, and a drop means a
-    host↔device sync crept back onto the per-step path.
+    host↔device sync crept back onto the per-step path. Likewise
+    ``host_stall.device_timed_steps`` (DeviceClock coverage) must never
+    decrease;
+  * ``attention`` — the ``attn_backend=flash`` forward/train-step
+    ``pallas_call`` counts must never increase (one launch per layer is
+    the invariant), and the compiled flash train-step FLOPs are
+    tolerance-gated like the other FLOPs fields.
 
 Wall-clock fields (including ``host_stall.blocked_ms_per_step``) are
 deliberately ignored (CI machines are noisy).
@@ -96,6 +102,29 @@ def compare(baseline: Dict[str, Any], current: Dict[str, Any],
             check("host_stall.dispatch_ahead_steps", b, c, c < b,
                   "async-loop dispatch-ahead depth decreased (a per-step "
                   "host sync crept back in)")
+            if "device_timed_steps" in base_stall:
+                b = float(base_stall["device_timed_steps"])
+                c = float(cur_stall.get("device_timed_steps", 0))
+                check("host_stall.device_timed_steps", b, c, c < b,
+                      "DeviceClock coverage decreased (completion stamps "
+                      "are being dropped)")
+
+    # --- attention hot path: launches exact, train-step FLOPs tol-gated --
+    base_attn = baseline.get("attention")
+    if base_attn is not None:
+        cur_attn = current.get("attention")
+        if cur_attn is None:
+            problems.append("attention missing from the current report")
+        else:
+            for k in ("forward_pallas_call", "train_step_pallas_call"):
+                b = float(base_attn.get(k, 0))
+                c = float(cur_attn.get(k, 0))
+                check(f"attention.{k}", b, c, c > b,
+                      "flash-attention kernel launch count increased")
+            b = float(base_attn["train_step_flops"]["flash"])
+            c = float(cur_attn["train_step_flops"]["flash"])
+            check("attention.train_step_flops.flash", b, c,
+                  c > b * (1 + tol), f"compiled FLOPs grew > {tol:.0%}")
 
     cur_scaling = {e["name"]: e for e in current.get("scaling", [])}
     for entry in baseline.get("scaling", []):

@@ -147,8 +147,10 @@ class MetricsCallback(Callback):
             self.path, num_chips=len(jax.devices()),
             flops_per_step=train_step_flops(
                 trainer.num_params, tr.batch * tr.seq,
-                remat=trainer.mcfg.remat != "none"),
-            flush_every=self.flush_every)
+                remat=trainer.mcfg.remat != "none",
+                mcfg=trainer.mcfg, seq=tr.seq),
+            flush_every=self.flush_every,
+            device_clock=trainer.device_clock)
 
     def on_step_end(self, trainer, step, metrics) -> None:
         tr = trainer.config.train
@@ -172,17 +174,33 @@ class MetricsCallback(Callback):
 
 
 class StragglerCallback(Callback):
-    """Per-step wall-time distribution; summary lands in the report."""
+    """Per-step time distribution; summary lands in the report. With the
+    trainer's :class:`DeviceClock` active the monitor is fed DEVICE step
+    times (completion-stamp deltas, drained as they land) — dispatch jitter
+    on an async host loop says nothing about a slow device. Without the
+    clock it falls back to the dispatch clock."""
     priority = 40
 
     def __init__(self):
         self.monitor = StragglerMonitor()
+        self._source = "dispatch"
 
     def on_step_end(self, trainer, step, metrics) -> None:
-        self.monitor.record(trainer.last_step_time)
+        if trainer.device_clock is not None:
+            self._source = "device"
+            for _, dt in trainer.device_clock.poll():
+                self.monitor.record(dt)
+        else:
+            self.monitor.record(trainer.last_step_time)
 
     def on_train_end(self, trainer, report) -> None:
-        report["straggler"] = self.monitor.summary()
+        if trainer.device_clock is not None:
+            trainer.device_clock.drain()
+            for _, dt in trainer.device_clock.poll():
+                self.monitor.record(dt)
+        summary = self.monitor.summary()
+        summary["source"] = self._source
+        report["straggler"] = summary
 
 
 class LegacyFunctionCallback(Callback):

@@ -86,6 +86,9 @@ class TrainConfig:
     history_cap: int = 0                # >0: keep first + last N history
                                         # rows in the report (0 = all)
     stop_after: Optional[int] = None    # simulate preemption after N steps
+    device_timing: bool = True          # DeviceClock completion stamps:
+                                        # mfu/straggler see device time,
+                                        # not dispatch jitter
 
 
 # train fields that do not affect the optimization trajectory: two runs that
@@ -93,7 +96,7 @@ class TrainConfig:
 _NONSEMANTIC_TRAIN_FIELDS = ("log_every", "eval_every", "sync_eval",
                              "checkpoint_dir", "checkpoint_every",
                              "metrics_path", "metrics_flush_every",
-                             "history_cap", "stop_after")
+                             "history_cap", "stop_after", "device_timing")
 
 _SECTION_TYPES = {
     "model": ModelConfig,

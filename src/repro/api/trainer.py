@@ -40,7 +40,8 @@ from repro.api.config import ExperimentConfig
 from repro.distributed import sharding as sh
 from repro.launch import steps as steps_lib
 from repro.launch.mesh import make_host_mesh
-from repro.launch.metrics import MetricsFuture, materialize_metrics
+from repro.launch.metrics import (DeviceClock, MetricsFuture,
+                                  materialize_metrics)
 
 
 class HistoryBuffer:
@@ -107,6 +108,7 @@ class Trainer:
         self.start_step: int = 0
         self.num_params: int = 0
         self.last_step_time: float = 0.0
+        self.device_clock: Optional[DeviceClock] = None
         self.should_stop: bool = False
         self.stop_reason: Optional[str] = None
         self.checkpoint_manager = None
@@ -154,6 +156,8 @@ class Trainer:
         dispatched_ahead = 0
         dispatch_s = 0.0
         prev_row: Optional[MetricsFuture] = None
+        if tr.device_timing:
+            self.device_clock = DeviceClock()
         with sh.sharding_rules(mesh):
             self.state = steps_lib.init_train_state(
                 self.mcfg, self.tcfg, jax.random.PRNGKey(tr.seed), tr.batch)
@@ -173,6 +177,12 @@ class Trainer:
                 self.state, dev_metrics = run_step(self.state, batch, step)
                 self.last_step_time = time.time() - t0
                 dispatch_s += self.last_step_time
+                if self.device_clock is not None and dev_metrics:
+                    # metrics are detached (jnp.copy) — safe for the clock
+                    # thread to hold while donated buffers are reused
+                    self.device_clock.observe(
+                        step, dev_metrics.get(
+                            "loss", next(iter(dev_metrics.values()))))
                 # dispatch accounting: run_step returning means step N is
                 # ISSUED; if step N−1's metrics are still device futures at
                 # that point, the host ran ahead of the device queue
@@ -197,9 +207,17 @@ class Trainer:
                     "dispatch_s": dispatch_s,
                 },
             }
+            if self.device_clock is not None:
+                self.device_clock.drain()
+                report["host_loop"]["device_timed_steps"] = \
+                    self.device_clock.timed_steps
+                report["host_loop"]["device_time_s"] = \
+                    self.device_clock.total_device_s
             if history.dropped:
                 report["history_dropped"] = history.dropped
             if self.stop_reason is not None:
                 report["stopped"] = self.stop_reason
             self._fire("on_train_end", report)
+        if self.device_clock is not None:
+            self.device_clock.close()
         return report

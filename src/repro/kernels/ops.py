@@ -59,10 +59,13 @@ def rwkv_scan(r, k, v, w, u, chunk: int = 32) -> jax.Array:
 
 
 def flash_attention(q, k, v, causal: bool = True, window=None, softcap=None,
-                    block_q: int = 128, block_k: int = 128):
-    """Pallas flash attention (BH, S, Dh) — TPU fast path."""
+                    block_q: int = 128, block_k: int = 128, group: int = 1,
+                    scale=None):
+    """Pallas flash attention q (B·H, S, Dh), k/v (B·Hkv, T, Dh) — the
+    model hot path (differentiable; GQA via ``group``)."""
     from repro.kernels import flash_attention as _fa
     return _fa.flash_attention_pallas(q, k, v, block_q=block_q,
                                       block_k=block_k, causal=causal,
                                       window=window, softcap=softcap,
+                                      group=group, scale=scale,
                                       interpret=not _on_tpu())

@@ -26,19 +26,150 @@ from __future__ import annotations
 
 import json
 import os
+import queue
+import threading
 import time
-from typing import Any, Dict, Iterator, Mapping, MutableMapping, Optional
+from typing import Any, Dict, Iterator, List, Mapping, MutableMapping, \
+    Optional, Tuple
 
 import jax
 
 PEAK_FLOPS_PER_CHIP = 197e12
 
 
+def _attn_kv_horizon(S: int, window: Optional[int]) -> float:
+    """Mean per-query causal KV horizon length over a length-S sequence."""
+    if window is not None and window < S:
+        w = window
+        # the first w queries see q+1 keys, the rest see exactly w
+        return (w * (w + 1) / 2.0 + (S - w) * w) / S
+    return (S + 1) / 2.0
+
+
+def attention_train_flops(mcfg, seq: int, tokens_per_step: int,
+                          remat: bool = True) -> float:
+    """Per-step matmul FLOPs of the attention score/value products — the
+    O(S²·Dh·H) term that 6·N·tokens misses. Causal- and window-aware,
+    honoring the per-layer local/global pattern (gemma2, hymba)."""
+    if mcfg.family == "ssm" or not mcfg.num_heads:
+        return 0.0
+    local = mcfg.is_local_pattern()
+    per_token = 0.0
+    for i in range(mcfg.num_layers):
+        window = mcfg.sliding_window if (mcfg.sliding_window and local[i]) \
+            else None
+        kv = _attn_kv_horizon(seq, window)
+        per_token += 4.0 * kv * mcfg.num_heads * mcfg.head_dim  # QKᵀ + PV
+    total = per_token * 3.0                  # forward + 2× backward
+    if remat:
+        total *= 4.0 / 3.0                   # forward recompute under remat
+    return total * tokens_per_step
+
+
 def train_step_flops(num_params: int, tokens_per_step: int,
-                     remat: bool = True) -> float:
-    """6·N·D (+2·N·D recompute under full remat)."""
+                     remat: bool = True, mcfg=None,
+                     seq: Optional[int] = None) -> float:
+    """6·N·D (+2·N·D recompute under full remat), plus — when the model
+    config and sequence length are given — the attention O(S²) term.
+    Without them the legacy parameter-only estimate is returned (inflating
+    ``mfu`` as sequence length grows)."""
     base = 6.0 * num_params * tokens_per_step
-    return base * (8.0 / 6.0) if remat else base
+    total = base * (8.0 / 6.0) if remat else base
+    if mcfg is not None and seq:
+        total += attention_train_flops(mcfg, seq, tokens_per_step, remat=remat)
+    return total
+
+
+class DeviceClock:
+    """Device-time source: completion stamps without syncing the step path.
+
+    The dispatch clock (``Trainer.last_step_time``) measures how long the
+    host took to ENQUEUE a step — under the async host loop that is dispatch
+    jitter, not device time. Instead, each step hands one of its detached
+    device scalars to :meth:`observe`; a daemon thread ``block_until_ready``s
+    the markers in order and stamps the completion wall time. With the
+    dispatch queue saturated (the steady state the async loop maintains),
+    the delta between consecutive completion stamps IS the device execution
+    time of the step. The first observed step has no predecessor stamp and
+    is never timed, so N observed steps yield N−1 device timings.
+    """
+
+    def __init__(self):
+        self._q: "queue.SimpleQueue" = queue.SimpleQueue()
+        self._cond = threading.Condition()
+        self._times: Dict[int, float] = {}          # step → device seconds
+        self._fresh: List[Tuple[int, float]] = []   # not yet poll()ed
+        self._prev_t: Optional[float] = None
+        self._pending = 0
+        self._closed = False
+        self._thread = threading.Thread(target=self._run, daemon=True,
+                                        name="device-clock")
+        self._thread.start()
+
+    def _run(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            step, marker = item
+            try:
+                jax.block_until_ready(marker)
+            except Exception:
+                pass                      # a failed step still advances time
+            t = time.time()
+            with self._cond:
+                if self._prev_t is not None:
+                    dt = t - self._prev_t
+                    self._times[step] = dt
+                    self._fresh.append((step, dt))
+                self._prev_t = t
+                self._pending -= 1
+                self._cond.notify_all()
+
+    def observe(self, step: int, marker) -> None:
+        """Register one step's device marker (must be a DETACHED array —
+        the clock thread holds it until it completes)."""
+        if self._closed:
+            return
+        with self._cond:
+            self._pending += 1
+        self._q.put((step, marker))
+
+    def device_time(self, step: int,
+                    timeout: Optional[float] = None) -> Optional[float]:
+        """Device seconds for ``step``; optionally wait for the stamp."""
+        with self._cond:
+            if timeout and step not in self._times and self._pending:
+                self._cond.wait_for(
+                    lambda: step in self._times or not self._pending, timeout)
+            return self._times.get(step)
+
+    def poll(self) -> List[Tuple[int, float]]:
+        """Drain newly completed (step, device_dt) pairs (straggler feed)."""
+        with self._cond:
+            out, self._fresh = self._fresh, []
+            return out
+
+    def drain(self, timeout: float = 30.0) -> None:
+        """Block until every observed marker has been stamped."""
+        with self._cond:
+            self._cond.wait_for(lambda: self._pending == 0, timeout)
+
+    @property
+    def timed_steps(self) -> int:
+        with self._cond:
+            return len(self._times)
+
+    @property
+    def total_device_s(self) -> float:
+        with self._cond:
+            return sum(self._times.values())
+
+    def close(self) -> None:
+        if not self._closed:
+            self._closed = True
+            self._q.put(None)
+            self._thread.join(timeout=5.0)
 
 
 class MetricsFuture(MutableMapping):
@@ -119,14 +250,16 @@ def materialize_metrics(metrics: Mapping[str, Any]) -> Dict[str, float]:
 class MetricsLogger:
     def __init__(self, path: Optional[str] = None, num_chips: int = 1,
                  flops_per_step: Optional[float] = None,
-                 flush_every: int = 20):
+                 flush_every: int = 20,
+                 device_clock: Optional[DeviceClock] = None):
         self.path = path
         self.num_chips = num_chips
         self.flops_per_step = flops_per_step
         self.flush_every = max(1, flush_every)
+        self.device_clock = device_clock
         self._f = open(path, "a") if path else None
-        # pending rows: (host-side fields, metrics mapping) pairs; device
-        # values are materialized only when the pair is drained
+        # pending rows: (host-side fields, metrics mapping, tokens) triples;
+        # device values are materialized only when the row is drained
         self._pending: list = []
         self._last_t: Optional[float] = None
         self.tokens_seen = 0
@@ -158,27 +291,42 @@ class MetricsLogger:
             if self.flops_per_step:
                 base["mfu"] = (self.flops_per_step /
                                (dt * self.num_chips * PEAK_FLOPS_PER_CHIP))
+                base["mfu_source"] = "dispatch"
             if step_time is not None and gap is not None:
                 base["host_overhead_s"] = max(0.0, gap - step_time)
         self._last_t = now
         if self._f:
             # no stream, no queue: without a file the row would only be
             # materialized to be thrown away — leave the futures untouched
-            self._pending.append((base, metrics))
+            self._pending.append((base, metrics, tokens))
             if len(self._pending) >= self.flush_every:
                 self.flush()
         return base
 
     def flush(self):
         """Drain the pending rows: materialize device values (the only
-        host↔device sync in the logger) and write the JSONL block."""
+        host↔device sync in the logger) and write the JSONL block. With a
+        :class:`DeviceClock` attached, ``mfu``/throughput are re-sourced
+        from device time here — materializing the row's metrics guarantees
+        the device has finished the step, so the stamp is (near-)ready."""
         if not self._pending:
             return
         t0 = time.time()
         lines = []
-        for base, metrics in self._pending:
+        for base, metrics, tokens in self._pending:
             row = dict(base)
             row.update(materialize_metrics(metrics))
+            if self.device_clock is not None:
+                dev_dt = self.device_clock.device_time(row["step"], timeout=1.0)
+                if dev_dt is not None and dev_dt > 0:
+                    row["device_step_time_s"] = dev_dt
+                    if tokens:
+                        row["tokens_per_s"] = tokens / dev_dt
+                    if self.flops_per_step:
+                        row["mfu"] = (self.flops_per_step /
+                                      (dev_dt * self.num_chips *
+                                       PEAK_FLOPS_PER_CHIP))
+                        row["mfu_source"] = "device"
             lines.append(json.dumps(row))
         self._pending.clear()
         self.drain_s += time.time() - t0

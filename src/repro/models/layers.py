@@ -53,6 +53,78 @@ def _activation(name: str):
 # attention
 # ---------------------------------------------------------------------------
 
+_FLASH_BLOCKS = (128, 64, 32, 16, 8)
+
+
+def _flash_blocks(S: int, T: int):
+    """Largest kernel tile sizes dividing the q/kv lengths (None = none fit)."""
+    bq = next((b for b in _FLASH_BLOCKS if S % b == 0), None)
+    bk = next((b for b in _FLASH_BLOCKS if T % b == 0), None)
+    return bq, bk
+
+
+def _flash_feasible(cfg, S: int, T: int) -> bool:
+    bq, bk = _flash_blocks(S, T)
+    if bq is None or bk is None:
+        return False
+    # mirror the kernel wrapper's single-program VMEM guard
+    Dh = cfg.head_dim
+    return (2 * T * Dh + 3 * bq * Dh) * 4 <= 12 * 1024 * 1024
+
+
+def resolve_attn_backend(cfg, S: int, T: int) -> str:
+    """Training/prefill backend for this shape → flash | chunked | dense.
+
+    "auto" keeps the jnp paths off-TPU (interpret-mode Pallas is orders of
+    magnitude slower than XLA:CPU); explicit "flash" runs the kernel anywhere
+    (interpret on CPU), falling back to the jnp paths only when the
+    block-divisibility or VMEM guard refuses the shape.
+    """
+    b = getattr(cfg, "attn_backend", "auto")
+    chunked = "chunked" if cfg.attn_chunk and T > cfg.attn_chunk else "dense"
+    if b == "dense":
+        return "dense"
+    if b == "chunked":
+        return chunked
+    if b == "flash":
+        return "flash" if _flash_feasible(cfg, S, T) else chunked
+    if b == "auto":
+        if jax.default_backend() == "tpu" and _flash_feasible(cfg, S, T):
+            return "flash"
+        return chunked
+    raise ValueError(f"unknown attn_backend: {b!r}")
+
+
+def _flash_attention(cfg, q: jax.Array, k: jax.Array, v: jax.Array,
+                     is_local) -> jax.Array:
+    """Single-dispatch Pallas path: ONE pallas_call per layer. q (B,S,H,Dh)
+    pre-scaled (kernel scale=1); k/v (B,S,Hkv,Dh) — streams fold head-major
+    so GQA q stream i reads kv stream i // group without repeating K/V.
+    Assumes contiguous from-zero positions (forward_hiddens' layout); the
+    cache/decode path never routes here.
+    """
+    from repro.kernels import flash_attention as _fa
+    B, S, H, Dh = q.shape
+    Hkv = k.shape[2]
+    bq, bk = _flash_blocks(S, S)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, Dh)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * Hkv, S, Dh)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * Hkv, S, Dh)
+    if cfg.sliding_window is None:
+        window = None
+    elif isinstance(is_local, bool):
+        window = cfg.sliding_window if is_local else None
+    else:
+        # traced per-layer local/global pattern (gemma2's scanned
+        # alternation): dynamic window operand; w >= S is a no-op mask.
+        window = jnp.where(is_local, cfg.sliding_window, S).astype(jnp.int32)
+    out = _fa.flash_attention_pallas(
+        qf, kf, vf, block_q=bq, block_k=bk, causal=True, window=window,
+        softcap=cfg.attn_logit_softcap, group=H // Hkv, scale=1.0,
+        interpret=jax.default_backend() != "tpu")
+    return out.reshape(B, H, S, Dh).transpose(0, 2, 1, 3)
+
+
 def attention(cfg, p, x: jax.Array, positions: jax.Array,
               *, is_local: jax.Array | bool = False,
               cache: Optional[dict] = None,
@@ -109,27 +181,37 @@ def attention(cfg, p, x: jax.Array, positions: jax.Array,
             wmask = jnp.broadcast_to(jnp.logical_and(causal, in_window)[None], mask.shape)
             mask = jnp.where(is_local, wmask, mask) if not isinstance(is_local, bool) \
                 else (wmask if is_local else mask)
+        # decode/prefill-into-cache keeps the jnp paths (per-query absolute
+        # positions; attn_backend targets the training/prefill hot path)
+        backend = "chunked" if cfg.attn_chunk and kv_len > cfg.attn_chunk \
+            else "dense"
     else:
         new_cache = None
         k_all, v_all = k, v
         kv_len = S
-        qpos = positions[:, :, None]
-        kpos = positions[:, None, :]
-        mask = kpos <= qpos
-        if cfg.sliding_window is not None:
-            wmask = jnp.logical_and(mask, kpos > qpos - cfg.sliding_window)
-            if isinstance(is_local, bool):
-                mask = wmask if is_local else mask
-            else:
-                mask = jnp.where(is_local, wmask, mask)
+        backend = resolve_attn_backend(cfg, S, kv_len)
+        mask = None
+        if backend != "flash":      # flash masks inside the kernel
+            qpos = positions[:, :, None]
+            kpos = positions[:, None, :]
+            mask = kpos <= qpos
+            if cfg.sliding_window is not None:
+                wmask = jnp.logical_and(mask, kpos > qpos - cfg.sliding_window)
+                if isinstance(is_local, bool):
+                    mask = wmask if is_local else mask
+                else:
+                    mask = jnp.where(is_local, wmask, mask)
 
     # grouped query attention: fold the group dim into heads
     group = H // Hkv
-    qg = q.reshape(B, S, Hkv, group, Dh)
-    if cfg.attn_chunk and kv_len > cfg.attn_chunk:
+    if backend == "flash":
+        out = _flash_attention(cfg, q, k_all, v_all, is_local)
+    elif backend == "chunked":
+        qg = q.reshape(B, S, Hkv, group, Dh)
         out = _chunked_attention(cfg, qg, k_all, v_all, mask)
         out = out.reshape(B, S, H, Dh)
     else:
+        qg = q.reshape(B, S, Hkv, group, Dh)
         logits = jnp.einsum("bskgh,btkh->bkgst", qg, k_all)      # (B,Hkv,g,S,T)
         logits = softcap(logits, cfg.attn_logit_softcap)
         logits = jnp.where(mask[:, None, None, :, :], logits.astype(jnp.float32), -1e30)
@@ -168,7 +250,11 @@ def _chunked_attention(cfg, qg: jax.Array, k_all: jax.Array, v_all: jax.Array,
         s = jnp.where(mask_i[:, None, None, :, :], s, -1e30)
         m_new = jnp.maximum(m, jnp.max(s, axis=-1))
         alpha = jnp.exp(m - m_new)
-        p = jnp.exp(s - m_new[..., None])
+        # A chunk whose mask row is ALL false keeps m_new at -1e30; without
+        # the guard p = exp(0) = 1 there, silently averaging V for rows
+        # whose whole horizon is masked.
+        p = jnp.where(m_new[..., None] > -0.5e30,
+                      jnp.exp(s - m_new[..., None]), 0.0)
         l = l * alpha + jnp.sum(p, axis=-1)
         acc = acc * alpha[..., None] + jnp.einsum(
             "bkgst,btkh->bkgsh", p.astype(v_i.dtype), v_i).astype(jnp.float32)

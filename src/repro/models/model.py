@@ -67,6 +67,10 @@ class ModelConfig:
     # perf knobs (hillclimb levers)
     remat: str = "full"                            # none | full | dots
     scan_layers: bool = True
+    attn_backend: str = "auto"                     # auto | dense | chunked |
+                                                   # flash (Pallas kernel;
+                                                   # auto = flash on TPU,
+                                                   # jnp paths elsewhere)
     attn_chunk: int = 0                            # 0 = dense scores; else
                                                    # flash-style KV chunking
     loss_chunk: int = 0                            # 0 = whole-seq CE; else

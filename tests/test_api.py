@@ -224,9 +224,11 @@ class TestTrainerLifecycle:
 
 
 # JSONL fields that legitimately differ between two otherwise-identical
-# runs: wall clocks and everything derived from them
+# runs: wall clocks and everything derived from them (device completion
+# stamps included — mfu_source only because a slow CI flush can time out
+# waiting on the clock and fall back to the dispatch value)
 _TIMING_FIELDS = ("time", "step_time_s", "tokens_per_s", "mfu",
-                  "host_overhead_s")
+                  "host_overhead_s", "device_step_time_s", "mfu_source")
 
 
 def _strip_timing(rows):

@@ -167,3 +167,101 @@ class TestFlashAttentionKernel:
         assert o_k.dtype == jnp.bfloat16
         np.testing.assert_allclose(np.asarray(o_k, np.float32),
                                    np.asarray(o_r, np.float32), atol=3e-2)
+
+    def test_fully_masked_rows_are_zero(self, rng):
+        """Regression for the masked-tile bug: a window that masks EVERY
+        key for a q row must yield exactly 0, not exp(-1e30 − (−1e30)) = 1
+        renormalized into the mean of V (the pre-fix garbage)."""
+        from repro.kernels.flash_attention import flash_attention_pallas
+        q = jnp.asarray(rng.normal(size=(2, 128, 32)).astype(np.float32))
+        k = jnp.asarray(rng.normal(size=(2, 128, 32)).astype(np.float32))
+        v = jnp.asarray(rng.normal(size=(2, 128, 32)).astype(np.float32))
+        o = flash_attention_pallas(q, k, v, block_q=64, block_k=64,
+                                   causal=True, window=0, interpret=True)
+        assert np.array_equal(np.asarray(o), np.zeros_like(np.asarray(o)))
+
+    @pytest.mark.parametrize("causal,window", [(True, None), (True, 48)])
+    def test_bounded_loop_bit_parity(self, rng, causal, window):
+        """The causal/window KV loop bound must be a pure skip: every tile
+        it skips is fully masked, so bounded vs exhaustive is BITWISE
+        identical (skipped tiles contribute alpha=1, p=0 exactly)."""
+        from repro.kernels.flash_attention import flash_attention_pallas
+        q = jnp.asarray(rng.normal(size=(2, 256, 32)).astype(np.float32))
+        k = jnp.asarray(rng.normal(size=(2, 256, 32)).astype(np.float32))
+        v = jnp.asarray(rng.normal(size=(2, 256, 32)).astype(np.float32))
+        kw = dict(block_q=64, block_k=64, causal=causal, window=window,
+                  interpret=True)
+        o_b = flash_attention_pallas(q, k, v, bound_loop=True, **kw)
+        o_u = flash_attention_pallas(q, k, v, bound_loop=False, **kw)
+        assert np.array_equal(np.asarray(o_b), np.asarray(o_u))
+
+    @pytest.mark.parametrize("group", [2, 4])
+    def test_gqa_matches_repeated_kv(self, rng, group):
+        """group > 1 folds GQA into the BH axis (kv stream = bh // group)
+        without materializing repeated K/V — must match the repeat."""
+        from repro.kernels.flash_attention import flash_attention_pallas
+        BHkv, S, Dh = 2, 128, 32
+        q = jnp.asarray(
+            rng.normal(size=(BHkv * group, S, Dh)).astype(np.float32))
+        k = jnp.asarray(rng.normal(size=(BHkv, S, Dh)).astype(np.float32))
+        v = jnp.asarray(rng.normal(size=(BHkv, S, Dh)).astype(np.float32))
+        o_g = flash_attention_pallas(q, k, v, block_q=64, block_k=64,
+                                     group=group, interpret=True)
+        o_r = ref.flash_attention_ref(q, jnp.repeat(k, group, axis=0),
+                                      jnp.repeat(v, group, axis=0))
+        np.testing.assert_allclose(np.asarray(o_g), np.asarray(o_r),
+                                   atol=2e-5)
+
+    @pytest.mark.parametrize("window,softcap,group", [
+        (None, None, 1), (48, None, 1), (None, 30.0, 1), (48, 30.0, 2),
+    ])
+    def test_grad_matches_ref(self, rng, window, softcap, group):
+        """custom_vjp backward (recompute dq/dk/dv kernels) vs autodiff
+        through the dense oracle."""
+        from repro.kernels.flash_attention import flash_attention_pallas
+        BHkv, S, Dh = 2, 128, 32
+        q = jnp.asarray(
+            rng.normal(size=(BHkv * group, S, Dh)).astype(np.float32))
+        k = jnp.asarray(rng.normal(size=(BHkv, S, Dh)).astype(np.float32))
+        v = jnp.asarray(rng.normal(size=(BHkv, S, Dh)).astype(np.float32))
+        dout = jnp.asarray(
+            rng.normal(size=(BHkv * group, S, Dh)).astype(np.float32))
+
+        def loss_k(q, k, v):
+            o = flash_attention_pallas(q, k, v, block_q=64, block_k=64,
+                                       window=window, softcap=softcap,
+                                       group=group, interpret=True)
+            return jnp.sum(o * dout)
+
+        def loss_r(q, k, v):
+            kk = jnp.repeat(k, group, axis=0)
+            vv = jnp.repeat(v, group, axis=0)
+            o = ref.flash_attention_ref(q, kk, vv, window=window,
+                                        softcap=softcap)
+            return jnp.sum(o * dout)
+
+        g_k = jax.grad(loss_k, argnums=(0, 1, 2))(q, k, v)
+        g_r = jax.grad(loss_r, argnums=(0, 1, 2))(q, k, v)
+        for a, b, name in zip(g_k, g_r, ("dq", "dk", "dv")):
+            np.testing.assert_allclose(
+                np.asarray(a), np.asarray(b), atol=5e-4,
+                err_msg=f"{name} mismatch (window={window}, "
+                        f"softcap={softcap}, group={group})")
+
+    def test_dynamic_window_matches_static(self, rng):
+        """window as a TRACED int (the model's scan-carried is_local) must
+        match the python-int window bit for bit."""
+        from repro.kernels.flash_attention import flash_attention_pallas
+        q = jnp.asarray(rng.normal(size=(2, 128, 32)).astype(np.float32))
+        k = jnp.asarray(rng.normal(size=(2, 128, 32)).astype(np.float32))
+        v = jnp.asarray(rng.normal(size=(2, 128, 32)).astype(np.float32))
+
+        @jax.jit
+        def dyn(q, k, v, w):
+            return flash_attention_pallas(q, k, v, block_q=64, block_k=64,
+                                          window=w, interpret=True)
+
+        o_d = dyn(q, k, v, jnp.int32(48))
+        o_s = flash_attention_pallas(q, k, v, block_q=64, block_k=64,
+                                     window=48, interpret=True)
+        assert np.array_equal(np.asarray(o_d), np.asarray(o_s))

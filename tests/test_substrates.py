@@ -395,3 +395,80 @@ class TestMetricsAndEval:
         rows = read_metrics(mpath)
         assert len(rows) == 6
         assert any("eval_ppl" in h for h in report["history"])
+
+    def test_train_step_flops_attention_term(self):
+        """Regression for the mfu denominator: 6·N·tokens misses the
+        O(S²·Dh·H) attention work, so at fixed tokens the param-only
+        estimate is flat in S while compiled FLOPs grow. The
+        attention-aware estimate must track that growth better."""
+        from repro.compat import cost_analysis_dict
+        from repro.launch.metrics import (attention_train_flops,
+                                          train_step_flops)
+        from repro.models import model as M
+
+        def mk(S):
+            cfg = M.ModelConfig(
+                family="dense", num_layers=2, d_model=64, num_heads=4,
+                num_kv_heads=2, head_dim=16, d_ff=128, vocab_size=64,
+                param_dtype="float32", scan_layers=False)
+            params = M.init_params(cfg, jax.random.PRNGKey(0))
+            B = 512 // S                       # fixed tokens per step
+            toks = jnp.zeros((B, S), jnp.int32)
+            batch = {"tokens": toks, "labels": toks}
+
+            def step(p, b):
+                return jax.grad(lambda pp: M.loss_fn(cfg, pp, b)[0])(p)
+
+            compiled = jax.jit(step).lower(params, batch).compile()
+            measured = cost_analysis_dict(compiled).get("flops", 0.0)
+            n = sum(int(np.prod(l.shape))
+                    for l in jax.tree_util.tree_leaves(params))
+            return (measured,
+                    train_step_flops(n, B * S, remat=False),
+                    train_step_flops(n, B * S, remat=False, mcfg=cfg, seq=S))
+
+        m1, p1, a1 = mk(128)
+        m2, p2, a2 = mk(512)
+        assert p1 == p2                        # param-only: blind to S
+        assert a2 > a1 > p1                    # attention term grows with S
+        measured_ratio = m2 / m1
+        assert measured_ratio > 1.05           # XLA sees the S² work too
+        # attention-aware ratio lands closer to the measured growth
+        assert abs(a2 / a1 - measured_ratio) < abs(1.0 - measured_ratio)
+
+    def test_attention_flops_window_and_pattern_aware(self):
+        """A sliding window caps the per-query KV horizon, and only LOCAL
+        layers in the pattern get the cap."""
+        from repro.launch.metrics import attention_train_flops
+        from repro.models import model as M
+        import dataclasses
+
+        base = M.ModelConfig(
+            family="dense", num_layers=4, d_model=64, num_heads=4,
+            num_kv_heads=2, head_dim=16, d_ff=128, vocab_size=64)
+        full = attention_train_flops(base, seq=1024, tokens_per_step=1024)
+        local = dataclasses.replace(base, sliding_window=64,
+                                    layer_pattern=("local",))
+        capped = attention_train_flops(local, seq=1024, tokens_per_step=1024)
+        assert capped < full / 4               # horizon 512 → ~64
+        mixed = dataclasses.replace(base, sliding_window=64,
+                                    layer_pattern=("local", "global"))
+        half = attention_train_flops(mixed, seq=1024, tokens_per_step=1024)
+        assert capped < half < full
+
+    def test_device_clock_times_all_but_first_step(self):
+        """N observed steps yield exactly N−1 timings, delivered to both
+        poll() (straggler feed) and device_time() (logger)."""
+        from repro.launch.metrics import DeviceClock
+        clock = DeviceClock()
+        for step in range(5):
+            clock.observe(step, jnp.float32(step))
+        clock.drain()
+        assert clock.timed_steps == 4
+        assert clock.device_time(0, timeout=0.1) is None   # no predecessor
+        for step in range(1, 5):
+            assert clock.device_time(step, timeout=1.0) >= 0.0
+        assert clock.total_device_s >= 0.0
+        assert len(clock.poll()) == 4
+        assert clock.poll() == []              # fresh list drained once
+        clock.close()

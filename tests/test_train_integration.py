@@ -110,6 +110,34 @@ class TestOverlappedSelector:
         assert pivots[3] == pivots[4] == pivots[5]    # refresh at 3, hold
 
 
+class TestFlashBackendTraining:
+    def test_flash_selection_pivots_match_dense(self):
+        """attn_backend is a kernel schedule, not an experiment: GRAFT's
+        discrete selection (pivots, ranks) must be IDENTICAL under the
+        flash and dense attention paths on synthetic_lm."""
+        from repro.api import ExperimentConfig, Trainer
+
+        def run(backend):
+            cfg = ExperimentConfig().apply_overrides([
+                "train.steps=5", "train.batch=8", "train.seq=32",
+                "train.log_every=0",
+                'model.overrides={"attn_backend": "%s", '
+                '"param_dtype": "float32"}' % backend,
+                "graft.rset=[2,4]", "graft.refresh_every=2",
+            ])
+            tr = Trainer(cfg, use_default_callbacks=False)
+            report = tr.fit()
+            return report, np.asarray(tr.state["graft"].pivots)
+
+        r_f, piv_f = run("flash")
+        r_d, piv_d = run("dense")
+        assert np.array_equal(piv_f, piv_d)
+        assert [h["rank"] for h in r_f["history"]] == \
+            [h["rank"] for h in r_d["history"]]
+        np.testing.assert_allclose(r_f["final_loss"], r_d["final_loss"],
+                                   rtol=1e-4)
+
+
 class TestGraftVsRandomSubset:
     def test_graft_selects_better_than_random_on_skewed_batch(self, rng):
         """On a batch with a few dominant directions, GRAFT's projection
