@@ -141,7 +141,7 @@ def run(full_steps: int = STEPS) -> List[str]:
     g = np.random.default_rng(1)
     flops_ex = train_flops_per_example(DIM, HIDDEN, CLASSES)
     full_flops = 0.0
-    for step in range(STEPS):
+    for _ in range(STEPS):
         idx = g.choice(len(ytr), BATCH, replace=False)
         full_params = full_step(full_params, jnp.asarray(xtr[idx]),
                                 jnp.asarray(ytr[idx]))

@@ -44,6 +44,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import csv_row, time_call
+from repro.analysis import jaxpr_audit
 from repro.compat import cost_analysis_dict
 from repro.core.features import sketch_svd_features, svd_features
 from repro.core.maxvol import fast_maxvol
@@ -66,35 +67,11 @@ def _flops(fn, *args) -> float:
     return cost_analysis_dict(compiled).get("flops", 0.0)
 
 
-def _count_primitives(fn, *args) -> Dict[str, int]:
-    """Primitive counts in the traced jaxpr, recursing into sub-jaxprs
-    (pjit bodies, cond branches, scans) — the dispatch-shape evidence:
-    ``pallas_call`` entries = kernel launches per refresh."""
-    counts: Dict[str, int] = {}
-
-    def subjaxprs(v):
-        if isinstance(v, jax.core.ClosedJaxpr):
-            yield v.jaxpr
-        elif isinstance(v, jax.core.Jaxpr):
-            yield v
-        elif isinstance(v, (list, tuple)):
-            for item in v:
-                yield from subjaxprs(item)
-
-    def walk(jp):
-        for eqn in jp.eqns:
-            counts[eqn.primitive.name] = counts.get(eqn.primitive.name, 0) + 1
-            for v in eqn.params.values():
-                for sub in subjaxprs(v):
-                    walk(sub)
-
-    walk(jax.make_jaxpr(fn)(*args).jaxpr)
-    return counts
-
-
-def _dispatch_entry(counts: Dict[str, int]) -> Dict[str, int]:
-    return {"pallas_call": counts.get("pallas_call", 0),
-            "gather": counts.get("gather", 0)}
+# jaxpr walking lives in repro.analysis.jaxpr_audit — one implementation
+# feeding the bench entries, the regression gate, and `python -m
+# repro.analysis`, so measured and gated counts cannot drift apart
+_count_primitives = jaxpr_audit.count_primitives
+_dispatch_entry = jaxpr_audit.dispatch_summary
 
 
 _HOST_STALL_STEPS = 12                   # async-loop probe config (must stay

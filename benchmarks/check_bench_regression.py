@@ -41,6 +41,8 @@ import os
 import sys
 from typing import Any, Dict, List, Tuple
 
+from repro.analysis.jaxpr_audit import monotone_count_rows
+
 Row = Tuple[str, float, float, bool]   # metric, baseline, current, regressed
 
 
@@ -61,17 +63,19 @@ def compare(baseline: Dict[str, Any], current: Dict[str, Any],
             problems.append(f"{name}: {why} (baseline {_fmt(b)}, "
                             f"current {_fmt(c)})")
 
-    # --- dispatch shape: exact counters, monotone gate -------------------
+    # --- dispatch shape: exact counters, monotone gate (the differ is the
+    # auditor's, shared with bench collection — one accounting, no drift) --
     for path, entry in sorted(baseline.get("dispatch_per_refresh", {}).items()):
         cur = current.get("dispatch_per_refresh", {}).get(path)
         if cur is None:
             problems.append(f"dispatch_per_refresh['{path}'] missing from "
                             "the current report")
             continue
-        for k in ("pallas_call", "gather"):
-            b, c = float(entry.get(k, 0)), float(cur.get(k, 0))
-            check(f"dispatch.{path}.{k}", b, c, c > b,
-                  "dispatch count increased")
+        r, p = monotone_count_rows(f"dispatch.{path}", entry, cur,
+                                   ("pallas_call", "gather"),
+                                   "dispatch count increased")
+        rows.extend(r)
+        problems.extend(p)
 
     # --- compiled FLOPs: tolerance gate ---------------------------------
     for key in sorted(baseline):
@@ -116,11 +120,12 @@ def compare(baseline: Dict[str, Any], current: Dict[str, Any],
         if cur_attn is None:
             problems.append("attention missing from the current report")
         else:
-            for k in ("forward_pallas_call", "train_step_pallas_call"):
-                b = float(base_attn.get(k, 0))
-                c = float(cur_attn.get(k, 0))
-                check(f"attention.{k}", b, c, c > b,
-                      "flash-attention kernel launch count increased")
+            r, p = monotone_count_rows(
+                "attention", base_attn, cur_attn,
+                ("forward_pallas_call", "train_step_pallas_call"),
+                "flash-attention kernel launch count increased")
+            rows.extend(r)
+            problems.extend(p)
             b = float(base_attn["train_step_flops"]["flash"])
             c = float(cur_attn["train_step_flops"]["flash"])
             check("attention.train_step_flops.flash", b, c,

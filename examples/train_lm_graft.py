@@ -19,13 +19,13 @@ from repro.api import (ExperimentConfig, GraftConfig, ModelConfig,
 
 PRESETS = {
     # ~100M params: 12L d768 12H — the paper-scale LM target
-    "100m": dict(num_layers=12, d_model=768, num_heads=12, num_kv_heads=12,
-                 head_dim=64, d_ff=3072, vocab_size=32000,
-                 batch=64, seq=512),
+    "100m": {"num_layers": 12, "d_model": 768, "num_heads": 12,
+             "num_kv_heads": 12, "head_dim": 64, "d_ff": 3072,
+             "vocab_size": 32000, "batch": 64, "seq": 512},
     # CPU-friendly faithful miniature (~8M params)
-    "cpu": dict(num_layers=4, d_model=256, num_heads=8, num_kv_heads=4,
-                head_dim=32, d_ff=1024, vocab_size=2048,
-                batch=16, seq=128),
+    "cpu": {"num_layers": 4, "d_model": 256, "num_heads": 8,
+            "num_kv_heads": 4, "head_dim": 32, "d_ff": 1024,
+            "vocab_size": 2048, "batch": 16, "seq": 128},
 }
 
 

@@ -1,0 +1,39 @@
+"""Static + runtime analysis of the training hot path.
+
+The repo's efficiency story is a set of *contracts* — single-dispatch fused
+selection (PR 3), an async host loop that never syncs per step (PR 5), one
+``pallas_call`` per attention layer (PR 6), kernels that fit the
+per-program VMEM budget — and this package is what enforces them on every
+PR instead of a human re-reading bench JSON:
+
+  * :mod:`repro.analysis.jaxpr_audit` — declarative primitive accounting
+    over traced jaxprs (launch counts, forbidden host callbacks, f64 ops,
+    stray gathers);
+  * :mod:`repro.analysis.sync_guard`  — a runtime guard that records every
+    host↔device sync with a stack summary and fails on syncs outside
+    sanctioned sites (``train.audit``);
+  * :mod:`repro.analysis.recompile`   — re-trace detection across step
+    calls, naming the argument whose shape/dtype drifted;
+  * :mod:`repro.analysis.vmem`        — static VMEM footprint + grid/block
+    divisibility for the Pallas kernels (the single budget the kernel
+    wrappers and backend routing consult);
+  * :mod:`repro.analysis.lint`        — AST rules ruff can't express
+    (host-sync calls in hot-path modules, wall-clock where the dispatch
+    clock is required, ``pallas_call`` outside ``kernels/``).
+
+All checkers emit :class:`repro.analysis.report.Finding`s — one format:
+rule id, severity, location, message, fix hint. ``python -m repro.analysis``
+runs the full battery over a probe config (the CI ``analysis`` job).
+"""
+from repro.analysis.report import Finding, Report, RULES
+from repro.analysis.sync_guard import (SyncGuard, SyncGuardError,
+                                       sync_allowed)
+
+__all__ = [
+    "Finding",
+    "Report",
+    "RULES",
+    "SyncGuard",
+    "SyncGuardError",
+    "sync_allowed",
+]

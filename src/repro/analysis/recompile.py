@@ -1,0 +1,140 @@
+"""Re-trace detection for step functions across training steps.
+
+A jitted step re-traces when its call signature drifts — a batch shape
+changed, a dtype widened, a static argument took a new value, a python
+scalar leaked into the args. Each re-trace costs a full trace+lower+compile
+(seconds) in the middle of training and usually repeats every step; it is
+the single most common way the async host loop's throughput silently
+collapses.
+
+:class:`RecompileWatcher` does two independent checks:
+
+* **signature drift** — :meth:`observe` snapshots the (shape, dtype)
+  spec of every argument leaf per call and diffs it against the previous
+  call, emitting RC001 naming exactly the key path that changed
+  (``batch['x']: f32[8,16] → f32[8,32]``). This catches the *cause*
+  before jit even re-traces.
+* **cache growth** — :meth:`watch` registers a jitted function;
+  :meth:`check_caches` reads its compile-cache size and emits RC001 when
+  the cache grew past the expected number of specializations. This
+  catches re-traces whose cause is outside the observed args (closure
+  drift, weak-type promotion).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+
+from repro.analysis.report import Finding, Report
+
+
+def leaf_spec(leaf: Any) -> str:
+    """Stable signature of one argument leaf: aval spec for arrays,
+    ``repr`` for static python values (both re-trace keys)."""
+    shape = getattr(leaf, "shape", None)
+    dtype = getattr(leaf, "dtype", None)
+    if shape is not None and dtype is not None:
+        weak = "~" if getattr(leaf, "weak_type", False) else ""
+        return f"{dtype}[{','.join(map(str, shape))}]{weak}"
+    if isinstance(leaf, (bool, int, float, str, bytes, type(None))):
+        r = repr(leaf)
+        return r if len(r) <= 64 else r[:61] + "..."
+    # exotic leaf: type identity only — repr could walk device arrays
+    return f"<{type(leaf).__name__}>"
+
+
+def signature_of(**named_args) -> Dict[str, str]:
+    """Key path → leaf spec over every named argument pytree."""
+    out: Dict[str, str] = {}
+    for name, tree in named_args.items():
+        leaves, _ = jax.tree_util.tree_flatten_with_path(tree)
+        if not leaves:
+            out[name] = repr(tree)
+        for path, leaf in leaves:
+            out[name + jax.tree_util.keystr(path)] = leaf_spec(leaf)
+    return out
+
+
+def _cache_size(fn: Callable) -> Optional[int]:
+    probe = getattr(fn, "_cache_size", None)
+    if probe is None:
+        return None
+    try:
+        return int(probe())
+    except Exception:
+        return None
+
+
+class RecompileWatcher:
+    """Accumulates RC001 findings over a sequence of step calls."""
+
+    def __init__(self, label: str = "step"):
+        self.label = label
+        self.findings: List[Finding] = []
+        self._prev: Optional[Dict[str, str]] = None
+        self._prev_step: Optional[int] = None
+        self._watched: List[Tuple[str, Callable, Optional[int]]] = []
+
+    # -- signature drift ---------------------------------------------------
+
+    def observe(self, step: Optional[int] = None,
+                **named_args) -> List[Finding]:
+        """Snapshot this call's argument signature; diff vs the previous
+        call. Returns the NEW findings from this observation."""
+        sig = signature_of(**named_args)
+        new: List[Finding] = []
+        if self._prev is not None:
+            at = f"{self.label}" + (f" step {step}" if step is not None
+                                    else "")
+            for key in sorted(set(self._prev) | set(sig)):
+                before, after = self._prev.get(key), sig.get(key)
+                if before == after:
+                    continue
+                if before is None:
+                    msg = f"argument '{key}' appeared ({after})"
+                elif after is None:
+                    msg = f"argument '{key}' disappeared (was {before})"
+                else:
+                    msg = f"argument '{key}' changed: {before} → {after}"
+                new.append(Finding(
+                    rule="RC001", location=at,
+                    message=msg + " — jit will re-trace on this call",
+                    fix_hint="pin the shape/dtype (pad the batch, cast at "
+                             "the loader) or mark the argument static once "
+                             "at construction"))
+        self._prev, self._prev_step = sig, step
+        self.findings.extend(new)
+        return new
+
+    # -- compile-cache growth ---------------------------------------------
+
+    def watch(self, name: str, fn: Callable,
+              expected_specializations: int = 1) -> None:
+        """Register a jitted function whose compile cache must not exceed
+        ``expected_specializations`` entries."""
+        self._watched.append((name, fn, expected_specializations))
+
+    def check_caches(self) -> List[Finding]:
+        new: List[Finding] = []
+        for name, fn, expected in self._watched:
+            size = _cache_size(fn)
+            if size is not None and expected is not None and size > expected:
+                new.append(Finding(
+                    rule="RC001", location=f"{self.label}:{name}",
+                    message=f"compile cache holds {size} specializations "
+                            f"(expected ≤ {expected}) — the step function "
+                            "re-traced during the run",
+                    fix_hint="diff the argument signatures (observe()) or "
+                             "check for closure/static-arg drift"))
+        self.findings.extend(new)
+        return new
+
+    # -- results -----------------------------------------------------------
+
+    def report(self) -> Report:
+        return Report(self.findings)
+
+    @property
+    def ok(self) -> bool:
+        return not self.findings

@@ -1,0 +1,251 @@
+"""Runtime guard recording every host↔device sync with a stack summary.
+
+PR 5's async host loop promises: between metric flushes the train loop
+never blocks on the device — no ``float(arr)``, no ``device_get``, no
+``block_until_ready`` outside the sanctioned drain points. This module
+pins that promise at runtime: :class:`SyncGuard` instruments the sync
+entry points (``jax.block_until_ready``, ``jax.device_get``, and the
+concrete Array's ``__float__``/``__int__``/``__bool__``/``__array__``)
+and records every hit in the guarded thread; ``strict=True`` raises
+:class:`SyncGuardError` at the offending call site.
+
+Sanctioned sites mark themselves with :func:`sync_allowed`::
+
+    with sync_allowed("metrics_flush"):
+        vals = [float(v) for v in pending]     # recorded, but sanctioned
+
+JAX's own transfer guard (``jax.transfer_guard_device_to_host``) is NOT
+used: on the CPU backend arrays are host-resident, so ``"disallow"``
+never fires — instrumentation is the only portable detector, and it also
+works in CI.
+
+Scope is **thread-local**: only threads that entered a guard are audited.
+The ``DeviceClock`` marker thread and ``SideStream`` waiter may block
+freely — blocking off-thread is exactly the design.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import sys
+import threading
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+
+from repro.analysis.report import Finding, Report
+
+_tls = threading.local()
+
+
+class SyncGuardError(RuntimeError):
+    """A host↔device sync occurred outside every sanctioned site."""
+
+
+@dataclasses.dataclass(frozen=True)
+class SyncEvent:
+    """One observed sync: what kind, which sanctioned site (if any), and
+    the user stack frame it came from."""
+    kind: str                       # "__float__", "device_get", ...
+    site: Optional[str]             # sanctioned site name, None = violation
+    where: str                      # "file.py:42 in flush"
+
+    @property
+    def sanctioned(self) -> bool:
+        return self.site is not None
+
+
+def _origin() -> Optional[str]:
+    """The frame that triggered the sync, or ``None`` when the trigger sits
+    inside jax/jaxlib itself.
+
+    Internal triggers are NOT user syncs: jit tracing/lowering legitimately
+    materializes captured device constants (``__array__`` during constant
+    folding), and attributing those to the step loop would fail audited
+    runs at compile time. A sync the user wrote always surfaces through a
+    non-jax frame (their ``float(...)`` / ``np.asarray`` call site), which
+    is what gets reported. Frames in numpy are walked through — a
+    ``np.mean(device_array)`` in user code is a user sync."""
+    f = sys._getframe(2)
+    while f is not None:
+        fn = f.f_code.co_filename.replace("\\", "/")
+        if "sync_guard" in fn or "/numpy/" in fn:
+            f = f.f_back
+            continue
+        if "/jax/" in fn or "/jaxlib/" in fn:
+            return None
+        return f"{fn.rsplit('/', 1)[-1]}:{f.f_lineno} in {f.f_code.co_name}"
+    return None
+
+
+def _allowed_site() -> Optional[str]:
+    stack = getattr(_tls, "allowed", None)
+    return stack[-1] if stack else None
+
+
+@contextlib.contextmanager
+def sync_allowed(site: str):
+    """Mark the enclosed block as a sanctioned sync site named ``site``.
+
+    Cheap no-op when no guard is active in this thread; safe to leave in
+    production code permanently (that's the point — the whitelist lives at
+    the drain sites themselves, not in a separate config).
+    """
+    stack = getattr(_tls, "allowed", None)
+    if stack is None:
+        stack = _tls.allowed = []
+    stack.append(site)
+    try:
+        yield
+    finally:
+        stack.pop()
+
+
+def _array_impl_class():
+    """The concrete on-device Array class whose dunders we instrument."""
+    try:
+        from jax._src.array import ArrayImpl
+        return ArrayImpl
+    except Exception:
+        return type(jax.numpy.zeros((), jax.numpy.float32))
+
+
+class SyncGuard:
+    """Context manager auditing host↔device syncs in the entering thread.
+
+    ``strict=True`` raises :class:`SyncGuardError` at the first
+    unsanctioned sync; ``strict=False`` only records, for post-hoc
+    :meth:`report`. Events (sanctioned included) accumulate in
+    :attr:`events`. Reentrant patches are refcounted so nested guards and
+    concurrent guarded threads compose.
+    """
+
+    _lock = threading.Lock()
+    _install_count = 0
+    _saved: Dict[str, Callable] = {}
+
+    def __init__(self, strict: bool = False, label: str = "sync_guard"):
+        self.strict = strict
+        self.label = label
+        self.events: List[SyncEvent] = []
+
+    # -- patch plumbing ----------------------------------------------------
+
+    @classmethod
+    def _install(cls) -> None:
+        with cls._lock:
+            cls._install_count += 1
+            if cls._install_count > 1:
+                return
+            arr = _array_impl_class()
+            cls._saved = {
+                "block_until_ready": jax.block_until_ready,
+                "device_get": jax.device_get,
+                "__float__": arr.__float__,
+                "__int__": arr.__int__,
+                "__bool__": arr.__bool__,
+                "__array__": arr.__array__,
+            }
+
+            def wrap(kind: str, orig: Callable) -> Callable:
+                def hook(*args, **kwargs):
+                    _record(kind)
+                    return orig(*args, **kwargs)
+                return hook
+
+            jax.block_until_ready = wrap(
+                "block_until_ready", cls._saved["block_until_ready"])
+            jax.device_get = wrap("device_get", cls._saved["device_get"])
+            for dunder in ("__float__", "__int__", "__bool__", "__array__"):
+                setattr(arr, dunder, wrap(dunder, cls._saved[dunder]))
+
+    @classmethod
+    def _uninstall(cls) -> None:
+        with cls._lock:
+            cls._install_count -= 1
+            if cls._install_count > 0:
+                return
+            arr = _array_impl_class()
+            jax.block_until_ready = cls._saved["block_until_ready"]
+            jax.device_get = cls._saved["device_get"]
+            for dunder in ("__float__", "__int__", "__bool__", "__array__"):
+                setattr(arr, dunder, cls._saved[dunder])
+            cls._saved = {}
+
+    # -- context manager ---------------------------------------------------
+
+    def __enter__(self) -> "SyncGuard":
+        if getattr(_tls, "guard", None) is not None:
+            raise RuntimeError("SyncGuard is not reentrant within a thread")
+        self._install()
+        _tls.guard = self
+        return self
+
+    def __exit__(self, *exc) -> None:
+        _tls.guard = None
+        self._uninstall()
+
+    # -- results -----------------------------------------------------------
+
+    def on_event(self, event: SyncEvent) -> None:
+        self.events.append(event)
+        if self.strict and not event.sanctioned:
+            raise SyncGuardError(
+                f"[{self.label}] unsanctioned host sync: {event.kind} at "
+                f"{event.where} — wrap the drain point in "
+                f"sync_allowed(\"<site>\") if this sync is intentional")
+
+    @property
+    def violations(self) -> List[SyncEvent]:
+        return [e for e in self.events if not e.sanctioned]
+
+    def site_counts(self) -> Dict[Tuple[str, str], int]:
+        out: Dict[Tuple[str, str], int] = {}
+        for e in self.events:
+            key = (e.site or "UNSANCTIONED", e.kind)
+            out[key] = out.get(key, 0) + 1
+        return out
+
+    def report(self) -> Report:
+        """SY001 per distinct violating call site; sanctioned totals as an
+        info note (the sync budget the run actually spent)."""
+        rep = Report()
+        seen: Dict[Tuple[str, str], int] = {}
+        for e in self.violations:
+            seen[(e.kind, e.where)] = seen.get((e.kind, e.where), 0) + 1
+        for (kind, where), n in seen.items():
+            times = f" ({n}×)" if n > 1 else ""
+            rep.add(Finding(
+                rule="SY001", location=where,
+                message=f"unsanctioned host sync via {kind}{times} while "
+                        f"[{self.label}] was active",
+                fix_hint="move the sync to a flush boundary, or wrap the "
+                         "site in repro.analysis.sync_allowed(...) with a "
+                         "named site"))
+        sanctioned = [e for e in self.events if e.sanctioned]
+        if sanctioned:
+            by_site: Dict[str, int] = {}
+            for e in sanctioned:
+                by_site[e.site] = by_site.get(e.site, 0) + 1
+            detail = ", ".join(f"{s}={n}" for s, n in sorted(by_site.items()))
+            rep.add(Finding(
+                rule="SY001", severity="info", location=self.label,
+                message=f"{len(sanctioned)} sanctioned sync(s): {detail}"))
+        return rep
+
+
+def _record(kind: str) -> None:
+    guard: Optional[SyncGuard] = getattr(_tls, "guard", None)
+    if guard is None:
+        return                       # unguarded thread (DeviceClock, ...)
+    if getattr(_tls, "in_hook", False):
+        return                       # device_get → __array__ reentry
+    _tls.in_hook = True
+    try:
+        where = _origin()
+        if where is None:
+            return                   # jax-internal trigger (compile path)
+        guard.on_event(SyncEvent(kind=kind, site=_allowed_site(),
+                                 where=where))
+    finally:
+        _tls.in_hook = False

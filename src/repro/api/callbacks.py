@@ -30,6 +30,7 @@ from typing import Any, Callable, Dict, Optional
 
 import jax
 
+from repro.analysis.sync_guard import sync_allowed
 from repro.checkpoint import CheckpointManager, EmergencySaver
 from repro.distributed.straggler import StragglerMonitor
 from repro.launch.evaluate import make_eval_fn_for
@@ -226,9 +227,10 @@ class ConsoleCallback(Callback):
 
     def on_step_end(self, trainer, step, metrics) -> None:
         if self.every and step % self.every == 0:
-            print(format_step_line(step, metrics, trainer.last_step_time,
-                                   use_graft=trainer.tcfg.use_graft),
-                  flush=True)
+            with sync_allowed("console"):
+                print(format_step_line(step, metrics, trainer.last_step_time,
+                                       use_graft=trainer.tcfg.use_graft),
+                      flush=True)
 
 
 class CheckpointCallback(Callback):
@@ -273,15 +275,16 @@ class CheckpointCallback(Callback):
         due = (step + 1) % self.every == 0
         if not (due or trainer.should_stop or step + 1 == total):
             return
-        path = self.manager.save(
-            step + 1, trainer.state,
-            extra={"train_step": step + 1,
-                   "data": trainer.data.state_dict(),
-                   # a checkpoint boundary is a legitimate sync point: the
-                   # manifest needs JSON floats, not device futures
-                   "metrics": materialize_metrics(metrics),
-                   "experiment": trainer.config.to_dict(),
-                   "config_hash": trainer.config.config_hash()})
+        with sync_allowed("checkpoint"):
+            path = self.manager.save(
+                step + 1, trainer.state,
+                extra={"train_step": step + 1,
+                       "data": trainer.data.state_dict(),
+                       # a checkpoint boundary is a legitimate sync point:
+                       # the manifest needs JSON floats, not device futures
+                       "metrics": materialize_metrics(metrics),
+                       "experiment": trainer.config.to_dict(),
+                       "config_hash": trainer.config.config_hash()})
         listeners = [cb for cb in trainer.callbacks
                      if type(cb).on_checkpoint is not Callback.on_checkpoint]
         if listeners:

@@ -89,6 +89,11 @@ class TrainConfig:
     device_timing: bool = True          # DeviceClock completion stamps:
                                         # mfu/straggler see device time,
                                         # not dispatch jitter
+    audit: bool = False                 # wrap the step loop in the
+                                        # repro.analysis SyncGuard +
+                                        # RecompileWatcher; fail on a host
+                                        # sync outside sanctioned sites or
+                                        # a step-function re-trace
 
 
 # train fields that do not affect the optimization trajectory: two runs that
@@ -96,7 +101,8 @@ class TrainConfig:
 _NONSEMANTIC_TRAIN_FIELDS = ("log_every", "eval_every", "sync_eval",
                              "checkpoint_dir", "checkpoint_every",
                              "metrics_path", "metrics_flush_every",
-                             "history_cap", "stop_after", "device_timing")
+                             "history_cap", "stop_after", "device_timing",
+                             "audit")
 
 _SECTION_TYPES = {
     "model": ModelConfig,

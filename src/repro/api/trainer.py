@@ -28,6 +28,7 @@ rides in the manifest::
 from __future__ import annotations
 
 import collections
+import contextlib
 import time
 from typing import Any, Dict, Iterable, List, Optional
 
@@ -158,6 +159,15 @@ class Trainer:
         prev_row: Optional[MetricsFuture] = None
         if tr.device_timing:
             self.device_clock = DeviceClock()
+        audit_guard = watcher = None
+        if tr.audit:
+            # fail-fast enforcement of the async-loop contract: any host
+            # sync outside a sync_allowed(...) site raises at the call
+            # site; any step-signature drift (→ jit re-trace) raises too
+            from repro.analysis.recompile import RecompileWatcher
+            from repro.analysis.sync_guard import SyncGuard
+            audit_guard = SyncGuard(strict=True, label="train.audit")
+            watcher = RecompileWatcher(label="run_step")
         with sh.sharding_rules(mesh):
             self.state = steps_lib.init_train_state(
                 self.mcfg, self.tcfg, jax.random.PRNGKey(tr.seed), tr.batch)
@@ -170,30 +180,45 @@ class Trainer:
             self._fire("on_train_start")
             it = iter(self.data)
             t_start = time.time()
-            for step in range(self.start_step, tr.steps):
-                batch_np = next(it)
-                batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
-                t0 = time.time()
-                self.state, dev_metrics = run_step(self.state, batch, step)
-                self.last_step_time = time.time() - t0
-                dispatch_s += self.last_step_time
-                if self.device_clock is not None and dev_metrics:
-                    # metrics are detached (jnp.copy) — safe for the clock
-                    # thread to hold while donated buffers are reused
-                    self.device_clock.observe(
-                        step, dev_metrics.get(
-                            "loss", next(iter(dev_metrics.values()))))
-                # dispatch accounting: run_step returning means step N is
-                # ISSUED; if step N−1's metrics are still device futures at
-                # that point, the host ran ahead of the device queue
-                if prev_row is not None and not prev_row.materialized:
-                    dispatched_ahead += 1
-                metrics = MetricsFuture(dev_metrics)
-                prev_row = metrics
-                self._fire("on_step_end", step, metrics)
-                history.append(metrics)
-                if self.should_stop:
-                    break
+            with contextlib.ExitStack() as audit_scope:
+                if audit_guard is not None:
+                    # guard covers the step loop only — state init, restore
+                    # hooks, and report assembly sync legitimately
+                    audit_scope.enter_context(audit_guard)
+                for step in range(self.start_step, tr.steps):
+                    batch_np = next(it)
+                    batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
+                    if watcher is not None:
+                        drift = watcher.observe(step=step, state=self.state,
+                                                batch=batch)
+                        if drift:
+                            raise RuntimeError(
+                                "[train.audit] " +
+                                "; ".join(f.message for f in drift))
+                    t0 = time.time()
+                    self.state, dev_metrics = run_step(self.state, batch,
+                                                       step)
+                    self.last_step_time = time.time() - t0
+                    dispatch_s += self.last_step_time
+                    if self.device_clock is not None and dev_metrics:
+                        # metrics are detached (jnp.copy) — safe for the
+                        # clock thread to hold while donated buffers are
+                        # reused
+                        self.device_clock.observe(
+                            step, dev_metrics.get(
+                                "loss", next(iter(dev_metrics.values()))))
+                    # dispatch accounting: run_step returning means step N
+                    # is ISSUED; if step N−1's metrics are still device
+                    # futures at that point, the host ran ahead of the
+                    # device queue
+                    if prev_row is not None and not prev_row.materialized:
+                        dispatched_ahead += 1
+                    metrics = MetricsFuture(dev_metrics)
+                    prev_row = metrics
+                    self._fire("on_step_end", step, metrics)
+                    history.append(metrics)
+                    if self.should_stop:
+                        break
             wall = time.time() - t_start
             last = history.last
             report: Dict[str, Any] = {
@@ -213,6 +238,15 @@ class Trainer:
                     self.device_clock.timed_steps
                 report["host_loop"]["device_time_s"] = \
                     self.device_clock.total_device_s
+            if audit_guard is not None:
+                report["audit"] = {
+                    "sync_events": len(audit_guard.events),
+                    "unsanctioned": len(audit_guard.violations),
+                    "sync_sites": {f"{site}:{kind}": n for (site, kind), n
+                                   in sorted(audit_guard.site_counts()
+                                             .items())},
+                    "recompiles": len(watcher.findings),
+                }
             if history.dropped:
                 report["history_dropped"] = history.dropped
             if self.stop_reason is not None:

@@ -23,8 +23,8 @@ class StragglerConfig:
 
 
 class StragglerMonitor:
-    def __init__(self, cfg: StragglerConfig = StragglerConfig()):
-        self.cfg = cfg
+    def __init__(self, cfg: Optional[StragglerConfig] = None):
+        self.cfg = cfg if cfg is not None else StragglerConfig()
         self.ema: Optional[float] = None
         self.count = 0
         self.flagged: List[int] = []

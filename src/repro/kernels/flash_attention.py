@@ -279,9 +279,9 @@ def _make_flash_fn(block_q: int, block_k: int, causal: bool, use_window: bool,
     """custom_vjp flash attention for one static config. The sliding window
     ``w`` is a (1,) int32 PRIMAL (it may be traced — gemma2's scanned
     is_local); its cotangent is float0."""
-    opts = dict(block_q=block_q, block_k=block_k, causal=causal,
-                use_window=use_window, softcap=softcap, scale=scale,
-                group=group, bound_loop=bound_loop, interpret=interpret)
+    opts = {"block_q": block_q, "block_k": block_k, "causal": causal,
+            "use_window": use_window, "softcap": softcap, "scale": scale,
+            "group": group, "bound_loop": bound_loop, "interpret": interpret}
 
     @jax.custom_vjp
     def fa(q, k, v, w):
@@ -324,9 +324,13 @@ def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
         raise ValueError(f"GQA shapes: q {q.shape}, k {k.shape}, group={group}")
     if Sq % block_q or T % block_k:
         raise ValueError(f"Sq={Sq} % {block_q} or T={T} % {block_k} != 0")
-    if (2 * T * Dh + 3 * block_q * Dh) * 4 > 12 * 1024 * 1024:
-        raise ValueError("KV stream exceeds the single-program VMEM budget; "
-                         "use the jnp chunked path (or KV grid tiling, TBD)")
+    from repro.analysis.vmem import flash_forward_vmem
+    est = flash_forward_vmem(T, Dh, block_q)
+    if not est.fits:
+        raise ValueError(
+            f"KV stream exceeds the single-program VMEM budget "
+            f"({est.describe()}); use the jnp chunked path (or KV grid "
+            "tiling, TBD)")
     if scale is None:
         scale = 1.0 / (Dh ** 0.5)
     use_window = window is not None

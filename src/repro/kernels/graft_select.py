@@ -36,7 +36,9 @@ from repro.core.numerics import safe_pivot
 _EPS = 1e-12
 
 # single-core VMEM budget for all resident blocks (f32 words, bytes)
-_VMEM_BUDGET_BYTES = 12 * 1024 * 1024
+# re-exported from the shared estimator (see repro.analysis.vmem, which
+# owns the budget and the per-kernel footprint formulas)
+from repro.analysis.vmem import VMEM_BUDGET_BYTES as _VMEM_BUDGET_BYTES
 
 
 def _fused_body(V, G, g_bar, rank: int):
@@ -120,12 +122,15 @@ def _fused_kernel_batched(v_ref, g_ref, gbar_ref,
 
 
 def _check_budget(K: int, R: int, d: int, rank: int) -> None:
-    # resident f32 blocks: V, G, G_sel, the MGS basis Q, and the one-hot
-    words = K * R + d * K + 2 * d * rank + K * rank
-    if words * 4 > _VMEM_BUDGET_BYTES:
+    # resident f32 blocks: V, G, G_sel, the MGS basis Q, and the one-hot —
+    # accounted by the shared estimator (repro.analysis.vmem), so the
+    # static checker and this runtime guard can never disagree
+    from repro.analysis.vmem import fused_select_vmem
+    est = fused_select_vmem(K, R, d, rank)
+    if not est.fits:
         raise ValueError(
-            f"fused selection blocks ({words * 4 / 2**20:.1f} MB) exceed the "
-            f"VMEM budget; shrink K={K}, d={d} or rank={rank}")
+            f"fused selection blocks ({est.total / 2**20:.1f} MB) exceed "
+            f"the VMEM budget; shrink K={K}, d={d} or rank={rank}")
 
 
 @functools.partial(jax.jit, static_argnames=("rank", "interpret"))

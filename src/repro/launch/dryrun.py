@@ -119,15 +119,14 @@ def _shardings_for(cell, mesh, rules):
 def compile_cell(cell: specs_lib.Cell, mesh) -> Dict[str, Any]:
     rules = cell.rules
     in_shardings = _shardings_for(cell, mesh, rules)
-    with sh.sharding_rules(mesh, rules):
-        with mesh:
-            jitted = jax.jit(cell.step_fn, in_shardings=in_shardings,
-                             donate_argnums=cell.donate)
-            t0 = time.time()
-            lowered = jitted.lower(*cell.abstract_args)
-            t1 = time.time()
-            compiled = lowered.compile()
-            t2 = time.time()
+    with sh.sharding_rules(mesh, rules), mesh:
+        jitted = jax.jit(cell.step_fn, in_shardings=in_shardings,
+                         donate_argnums=cell.donate)
+        t0 = time.time()
+        lowered = jitted.lower(*cell.abstract_args)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
     cost = cost_analysis_dict(compiled)
     hlo = compiled.as_text()
     coll = parse_collective_bytes(hlo)

@@ -25,6 +25,7 @@ from typing import Any, Callable, Dict
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.sync_guard import sync_allowed
 from repro.data import DataConfig, SyntheticLM
 from repro.data import sources as data_sources
 from repro.models import model as model_lib
@@ -56,7 +57,8 @@ class EvalFn:
     @staticmethod
     def collect(handle: Dict[str, jax.Array]) -> Dict[str, float]:
         """Materialize a dispatched handle to host floats (blocks)."""
-        return {k: float(v) for k, v in handle.items()}
+        with sync_allowed("eval_collect"):
+            return {k: float(v) for k, v in handle.items()}  # lint: allow
 
     def __call__(self, params) -> Dict[str, float]:
         return self.collect(self.dispatch(params))

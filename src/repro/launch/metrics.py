@@ -34,6 +34,8 @@ from typing import Any, Dict, Iterator, List, Mapping, MutableMapping, \
 
 import jax
 
+from repro.analysis.sync_guard import sync_allowed
+
 PEAK_FLOPS_PER_CHIP = 197e12
 
 
@@ -113,7 +115,8 @@ class DeviceClock:
                 return
             step, marker = item
             try:
-                jax.block_until_ready(marker)
+                # clock-thread blocking IS the design (off the step path)
+                jax.block_until_ready(marker)               # lint: allow
             except Exception:
                 pass                      # a failed step still advances time
             t = time.time()
@@ -224,7 +227,9 @@ class MetricsFuture(MutableMapping):
     def materialize(self) -> Dict[str, float]:
         """Pull every value to the host as a plain float (cached)."""
         if not self._ready:
-            self._data = {k: float(v)
+            # deliberately NOT a sanctioned site itself: under train.audit
+            # a materialize outside a wrapped drain point must fire SY001
+            self._data = {k: float(v)                       # lint: allow
                           for k, v in jax.device_get(self._data).items()}
             self._ready = True
         return self._data
@@ -244,7 +249,7 @@ def materialize_metrics(metrics: Mapping[str, Any]) -> Dict[str, float]:
     manifests, console lines, reports)."""
     if isinstance(metrics, MetricsFuture):
         return metrics.materialize()
-    return {k: float(v) for k, v in metrics.items()}
+    return {k: float(v) for k, v in metrics.items()}       # lint: allow
 
 
 class MetricsLogger:
@@ -313,21 +318,23 @@ class MetricsLogger:
             return
         t0 = time.time()
         lines = []
-        for base, metrics, tokens in self._pending:
-            row = dict(base)
-            row.update(materialize_metrics(metrics))
-            if self.device_clock is not None:
-                dev_dt = self.device_clock.device_time(row["step"], timeout=1.0)
-                if dev_dt is not None and dev_dt > 0:
-                    row["device_step_time_s"] = dev_dt
-                    if tokens:
-                        row["tokens_per_s"] = tokens / dev_dt
-                    if self.flops_per_step:
-                        row["mfu"] = (self.flops_per_step /
-                                      (dev_dt * self.num_chips *
-                                       PEAK_FLOPS_PER_CHIP))
-                        row["mfu_source"] = "device"
-            lines.append(json.dumps(row))
+        with sync_allowed("metrics_flush"):
+            for base, metrics, tokens in self._pending:
+                row = dict(base)
+                row.update(materialize_metrics(metrics))
+                if self.device_clock is not None:
+                    dev_dt = self.device_clock.device_time(row["step"],
+                                                           timeout=1.0)
+                    if dev_dt is not None and dev_dt > 0:
+                        row["device_step_time_s"] = dev_dt
+                        if tokens:
+                            row["tokens_per_s"] = tokens / dev_dt
+                        if self.flops_per_step:
+                            row["mfu"] = (self.flops_per_step /
+                                          (dev_dt * self.num_chips *
+                                           PEAK_FLOPS_PER_CHIP))
+                            row["mfu_source"] = "device"
+                lines.append(json.dumps(row))
         self._pending.clear()
         self.drain_s += time.time() - t0
         if self._f:

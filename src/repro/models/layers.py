@@ -67,9 +67,10 @@ def _flash_feasible(cfg, S: int, T: int) -> bool:
     bq, bk = _flash_blocks(S, T)
     if bq is None or bk is None:
         return False
-    # mirror the kernel wrapper's single-program VMEM guard
-    Dh = cfg.head_dim
-    return (2 * T * Dh + 3 * bq * Dh) * 4 <= 12 * 1024 * 1024
+    # the SAME estimator the kernel wrapper enforces (repro.analysis.vmem):
+    # the shape the router plans with is the shape the kernel accepts
+    from repro.analysis.vmem import flash_forward_vmem
+    return flash_forward_vmem(T, cfg.head_dim, bq).fits
 
 
 def resolve_attn_backend(cfg, S: int, T: int) -> str:

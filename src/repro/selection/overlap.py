@@ -33,6 +33,8 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.sync_guard import sync_allowed
+
 
 class SideStream:
     """At-most-one-in-flight side dispatch against soon-to-be-donated
@@ -73,7 +75,8 @@ class SideStream:
         tag, handle = self._tag, self._handle
         self._tag = self._handle = None
         if block:
-            jax.block_until_ready(handle)
+            with sync_allowed("side_stream"):
+                jax.block_until_ready(handle)              # lint: allow
         return tag, handle
 
 

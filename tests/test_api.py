@@ -12,7 +12,7 @@ from repro.api.config import apply_overrides
 from repro.launch.metrics import read_metrics
 from repro.launch.train import RunConfig, to_experiment, train
 
-SMALL = dict(steps=6, batch=8, seq=16, seed=3, log_every=0)
+SMALL = {"steps": 6, "batch": 8, "seq": 16, "seed": 3, "log_every": 0}
 
 
 def small_cfg(**train_kw):

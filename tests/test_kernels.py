@@ -189,8 +189,8 @@ class TestFlashAttentionKernel:
         q = jnp.asarray(rng.normal(size=(2, 256, 32)).astype(np.float32))
         k = jnp.asarray(rng.normal(size=(2, 256, 32)).astype(np.float32))
         v = jnp.asarray(rng.normal(size=(2, 256, 32)).astype(np.float32))
-        kw = dict(block_q=64, block_k=64, causal=causal, window=window,
-                  interpret=True)
+        kw = {"block_q": 64, "block_k": 64, "causal": causal,
+              "window": window, "interpret": True}
         o_b = flash_attention_pallas(q, k, v, bound_loop=True, **kw)
         o_u = flash_attention_pallas(q, k, v, bound_loop=False, **kw)
         assert np.array_equal(np.asarray(o_b), np.asarray(o_u))

@@ -85,7 +85,7 @@ class TestArchSmoke:
             isinstance(e, (str, type(None))) for e in x)
         flat_l = jax.tree_util.tree_flatten_with_path(lg, is_leaf=is_lg)[0]
         assert len(flat_p) == len(flat_l)
-        for (pp, leaf), (lp, logical) in zip(flat_p, flat_l):
+        for (pp, leaf), (_lp, logical) in zip(flat_p, flat_l):
             assert len(logical) == leaf.ndim, (pp, logical, leaf.shape)
 
 

@@ -22,7 +22,7 @@ class TestTheorem1Convergence:
             return Q_ @ (w - w_star)
 
         w = np.zeros(d, np.float32)
-        for t in range(400):
+        for _ in range(400):
             g = grad(w)
             # projection basis: top-8 directions of recent gradients + noise
             basis = np.stack([grad(w + 0.01 * rng.normal(size=d))
@@ -46,7 +46,7 @@ class TestTheorem1Convergence:
         ones = np.ones((d, 1)) / np.sqrt(d)
         B = np.linalg.qr(rng.normal(size=(d, 5)) -
                          ones @ (ones.T @ rng.normal(size=(d, 5))))[0]
-        for t in range(200):
+        for _ in range(200):
             g = grad(w)
             w = w - 0.1 * B @ (B.T @ g)
         # gradient norm stays large: projection killed the descent direction

@@ -33,9 +33,10 @@ class TestTrainLoop:
         # NOTE: the interrupted leg must keep steps=20 — the LR schedule is
         # a function of the TOTAL step budget, so "train 10 of 20" is
         # expressed via stop_after (preemption), not by shrinking steps.
-        common = dict(arch="minicpm-2b", batch=8, seq=32, use_graft=True,
-                      graft_rset=(2, 4), graft_refresh=4, lr=1e-3,
-                      log_every=100, checkpoint_every=10, seed=3)
+        common = {"arch": "minicpm-2b", "batch": 8, "seq": 32,
+                  "use_graft": True, "graft_rset": (2, 4), "graft_refresh": 4,
+                  "lr": 1e-3, "log_every": 100, "checkpoint_every": 10,
+                  "seed": 3}
         r_full = train(RunConfig(steps=20, **common))
         ck = str(tmp_path / "ck")
         train(RunConfig(steps=20, stop_after=10, checkpoint_dir=ck, **common))
