@@ -36,6 +36,7 @@ HOT_PATH_MODULES = (
     "launch/steps.py",
     "launch/metrics.py",
     "launch/evaluate.py",
+    "resilience/guard.py",
     "api/trainer.py",
     "api/callbacks.py",
     "selection/overlap.py",

@@ -26,6 +26,7 @@ always free.
 """
 from __future__ import annotations
 
+import math
 from typing import Any, Callable, Dict, Optional
 
 import jax
@@ -35,7 +36,8 @@ from repro.checkpoint import CheckpointManager, EmergencySaver
 from repro.distributed.straggler import StragglerMonitor
 from repro.launch.evaluate import make_eval_fn_for
 from repro.launch.metrics import (MetricsLogger, format_step_line,
-                                  materialize_metrics, train_step_flops)
+                                  materialize_metrics, sanitize_row,
+                                  train_step_flops)
 from repro.selection.overlap import SideStream
 
 
@@ -60,6 +62,12 @@ class Callback:
     def on_train_end(self, trainer, report: Dict[str, Any]) -> None:
         pass
 
+    def on_train_abort(self, trainer) -> None:
+        """Fired (instead of ``on_train_end``) when ``fit()`` exits on an
+        exception — release external resources here (signal handlers, open
+        files, writer threads) so a crashed run can be restarted in the
+        same process. Exceptions raised here are logged, not propagated."""
+
 
 class PreemptionCallback(Callback):
     """SIGTERM/SIGINT emergency stop + ``stop_after`` simulated preemption.
@@ -81,6 +89,12 @@ class PreemptionCallback(Callback):
             trainer.request_stop("stop_after")
 
     def on_train_end(self, trainer, report) -> None:
+        if self.saver is not None:
+            self.saver.restore_handlers()
+
+    def on_train_abort(self, trainer) -> None:
+        # a crashed fit() must not leave our handlers (and their stale
+        # stop flag) installed for the next Trainer in this process
         if self.saver is not None:
             self.saver.restore_handlers()
 
@@ -173,6 +187,10 @@ class MetricsCallback(Callback):
             report.setdefault("host_loop", {})["metrics_drain_s"] = \
                 self.logger.drain_s
 
+    def on_train_abort(self, trainer) -> None:
+        if self.logger is not None:
+            self.logger.close()     # flush the buffered tail of the stream
+
 
 class StragglerCallback(Callback):
     """Per-step time distribution; summary lands in the report. With the
@@ -253,11 +271,17 @@ class CheckpointCallback(Callback):
 
     def on_train_start(self, trainer) -> None:
         trainer.checkpoint_manager = self.manager
-        step = self.manager.latest_step()
-        if not self.restore or step is None:
+        if not self.restore:
             return
-        manifest = self.manager.manifest(step)
-        trainer.state = self.manager.restore(step, trainer.state)
+        try:
+            # newest checkpoint that verifies (checksums) AND is stamped
+            # healthy — a bit-flipped or mid-crash dir is quarantined to
+            # corrupt.<step> and the walk falls back to the previous one
+            _, tree, manifest = self.manager.restore_latest_good(
+                trainer.state)
+        except FileNotFoundError:
+            return                            # fresh run — nothing on disk
+        trainer.state = tree
         # restore the full pipeline state from the manifest ONCE — the
         # trainer creates its iterator only after on_train_start, so
         # nothing can clobber this
@@ -275,14 +299,28 @@ class CheckpointCallback(Callback):
         due = (step + 1) % self.every == 0
         if not (due or trainer.should_stop or step + 1 == total):
             return
+        if trainer.sentinel_tripped:
+            # the divergence guard tripped earlier in this hook pass: the
+            # live state is poisoned — refusing to save means keep-last-N
+            # can never rotate entirely onto bad states while the trainer
+            # rolls back (and GC won't run either, since it runs in save)
+            print(f"[ckpt] sentinel tripped — refusing to save step "
+                  f"{step + 1}", flush=True)
+            return
         with sync_allowed("checkpoint"):
+            # a checkpoint boundary is a legitimate sync point: the
+            # manifest needs JSON floats, not device futures
+            vals = materialize_metrics(metrics)
+            healthy = (vals.get("healthy", 1.0) >= 0.5
+                       and math.isfinite(vals.get("loss", 0.0)))
             path = self.manager.save(
                 step + 1, trainer.state,
                 extra={"train_step": step + 1,
                        "data": trainer.data.state_dict(),
-                       # a checkpoint boundary is a legitimate sync point:
-                       # the manifest needs JSON floats, not device futures
-                       "metrics": materialize_metrics(metrics),
+                       "metrics": sanitize_row(vals),
+                       "health": {"healthy": bool(healthy),
+                                  "bad_streak":
+                                      int(vals.get("bad_streak", 0.0))},
                        "experiment": trainer.config.to_dict(),
                        "config_hash": trainer.config.config_hash()})
         listeners = [cb for cb in trainer.callbacks
@@ -299,6 +337,13 @@ class CheckpointCallback(Callback):
 
     def on_train_end(self, trainer, report) -> None:
         self.manager.wait()
+
+    def on_train_abort(self, trainer) -> None:
+        try:
+            self.manager.wait()
+        except Exception:       # noqa: BLE001 — a writer that died
+            pass                # mid-save left its breadcrumbs on disk;
+                                # _recover() rolls them back on restart
 
 
 class HookRecorder(Callback):
@@ -331,6 +376,12 @@ def default_callbacks(cfg) -> list:
     cbs.append(MetricsCallback(tr.metrics_path,
                                flush_every=tr.metrics_flush_every))
     cbs.append(StragglerCallback())
+    if tr.sentinel:
+        # lazy: repro.resilience.guard imports this module
+        from repro.resilience.guard import DivergenceGuardCallback
+        cbs.append(DivergenceGuardCallback(
+            patience=tr.bad_step_patience,
+            check_every=max(1, tr.metrics_flush_every)))
     if tr.log_every:
         cbs.append(ConsoleCallback(tr.log_every))
     if tr.checkpoint_dir:

@@ -94,15 +94,33 @@ class TrainConfig:
                                         # RecompileWatcher; fail on a host
                                         # sync outside sanctioned sites or
                                         # a step-function re-trace
+    sentinel: bool = True               # on-device divergence sentinel:
+                                        # fused health word + skip-update
+                                        # (bit-neutral on healthy steps,
+                                        # hence non-semantic)
+    spike_z: float = 6.0                # loss-spike z-score vs the EMA in
+                                        # train state (0 = finite-only)
+    bad_step_patience: int = 10         # consecutive bad steps before the
+                                        # guard rolls back to last-good
+    device_timeout_s: float = 60.0      # DeviceClock stall watchdog; 0
+                                        # disables it
+    fault_plan: Optional[str] = None    # chaos harness: inline JSON or a
+                                        # path (see repro.resilience.chaos);
+                                        # REPRO_FAULT_PLAN env also works
 
 
 # train fields that do not affect the optimization trajectory: two runs that
-# differ only here are the same experiment (same config_hash)
+# differ only here are the same experiment (same config_hash). The
+# resilience knobs qualify because the sentinel is bit-exact on healthy
+# steps and a fault plan only perturbs a run that would otherwise be lost —
+# an injected run and its clean twin must share a hash for resume to work.
 _NONSEMANTIC_TRAIN_FIELDS = ("log_every", "eval_every", "sync_eval",
                              "checkpoint_dir", "checkpoint_every",
                              "metrics_path", "metrics_flush_every",
                              "history_cap", "stop_after", "device_timing",
-                             "audit")
+                             "audit", "sentinel", "spike_z",
+                             "bad_step_patience", "device_timeout_s",
+                             "fault_plan")
 
 _SECTION_TYPES = {
     "model": ModelConfig,
@@ -183,7 +201,8 @@ class ExperimentConfig:
             optimizer=cfg.optimizer, graft=cfg.graft,
             sampler=tr.sampler,
             probe_positions=tr.probe_positions,
-            microbatches=tr.microbatches)
+            microbatches=tr.microbatches,
+            sentinel=tr.sentinel, spike_z=tr.spike_z)
         return mcfg, tcfg, entry.build(d)
 
     # ------------------------------------------------------------------

@@ -36,6 +36,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.sync_guard import sync_allowed
 from repro.api import callbacks as cb_lib
 from repro.api.config import ExperimentConfig
 from repro.distributed import sharding as sh
@@ -113,6 +114,12 @@ class Trainer:
         self.should_stop: bool = False
         self.stop_reason: Optional[str] = None
         self.checkpoint_manager = None
+        # resilience: set by the DivergenceGuardCallback, consumed by the
+        # loop (rollback) and the CheckpointCallback (save refusal)
+        self.sentinel_tripped: bool = False
+        self.rollbacks: List[Dict[str, Any]] = []
+        self._rollback_reason: Optional[str] = None
+        self._chaos = None
 
     # ------------------------------------------------------------------
     @classmethod
@@ -122,13 +129,16 @@ class Trainer:
         """Reconstruct the exact experiment from a checkpoint directory
         alone: the manifest-embedded ``ExperimentConfig`` is reloaded,
         ``stop_after`` (a one-shot simulated preemption, already consumed)
-        is cleared, and ``checkpoint_dir`` is pointed at ``directory`` so
-        the run restores and keeps checkpointing in place."""
+        and ``fault_plan`` (injected faults must not replay into the
+        recovered run) are cleared, and ``checkpoint_dir`` is pointed at
+        ``directory`` so the run restores and keeps checkpointing in
+        place."""
         from repro.checkpoint import load_experiment
         import dataclasses
         cfg = load_experiment(directory)
         cfg = dataclasses.replace(cfg, train=dataclasses.replace(
-            cfg.train, stop_after=None, checkpoint_dir=directory))
+            cfg.train, stop_after=None, fault_plan=None,
+            checkpoint_dir=directory))
         return cls(cfg, callbacks=callbacks,
                    use_default_callbacks=use_default_callbacks)
 
@@ -141,14 +151,70 @@ class Trainer:
         if self.stop_reason is None:
             self.stop_reason = reason
 
+    def request_rollback(self, reason: str = "diverged") -> None:
+        """Ask the loop to restore the last healthy checkpoint after this
+        step's callbacks finish (the DivergenceGuardCallback's trip path).
+        Without a checkpoint manager the run stops instead — continuing a
+        diverged trajectory would only burn compute."""
+        if self._rollback_reason is None:
+            self._rollback_reason = reason
+
     def _fire(self, hook: str, *args) -> None:
         for cb in self.callbacks:
             getattr(cb, hook)(self, *args)
+
+    def _fire_abort(self) -> None:
+        """Best-effort cleanup when fit() is exiting on an exception and
+        ``on_train_end`` will never run — each callback gets its shot even
+        if an earlier one fails."""
+        for cb in self.callbacks:
+            try:
+                cb.on_train_abort(self)
+            except Exception as e:                      # noqa: BLE001
+                print(f"[train] abort cleanup error in "
+                      f"{type(cb).__name__}: {e}", flush=True)
+
+    def _perform_rollback(self, at_step: int) -> Optional[int]:
+        """Restore the newest checkpoint that verifies + is stamped healthy
+        and rewind the data pipeline to it. Returns the step to resume from,
+        or ``None`` (with a stop requested) when no rollback is possible."""
+        reason = self._rollback_reason
+        self._rollback_reason = None
+        mgr = self.checkpoint_manager
+        if mgr is None:
+            print(f"[train] divergence ({reason}) with no checkpoint "
+                  "manager — stopping", flush=True)
+            self.request_stop("diverged")
+            return None
+        with sync_allowed("rollback"):
+            mgr.wait()
+            try:
+                _, tree, manifest = mgr.restore_latest_good(self.state)
+            except FileNotFoundError:
+                print(f"[train] divergence ({reason}) and no healthy "
+                      "checkpoint to roll back to — stopping", flush=True)
+                self.request_stop("diverged")
+                return None
+            self.state = tree
+            self.data.load_state_dict(manifest["extra"]["data"])
+        resume = int(manifest["extra"]["train_step"])
+        self.sentinel_tripped = False
+        self.rollbacks.append(
+            {"at_step": at_step, "to_step": resume, "reason": reason})
+        print(f"[train] ROLLBACK at step {at_step}: {reason} — resumed "
+              f"from checkpoint step {resume}", flush=True)
+        return resume
 
     # ------------------------------------------------------------------
     def fit(self) -> Dict[str, Any]:
         cfg = self.config
         tr = cfg.train
+        from repro.resilience import chaos as chaos_lib
+        self._chaos = chaos_lib.load_plan(tr.fault_plan)
+        if self._chaos is not None:
+            # module-global so the checkpoint writer (its own thread) sees
+            # the crash points too
+            chaos_lib.activate(self._chaos)
         self.mcfg, self.tcfg, self.data = cfg.build()
         mesh = make_host_mesh()
         run_step = steps_lib.make_run_step(self.mcfg, self.tcfg)
@@ -158,7 +224,8 @@ class Trainer:
         dispatch_s = 0.0
         prev_row: Optional[MetricsFuture] = None
         if tr.device_timing:
-            self.device_clock = DeviceClock()
+            self.device_clock = DeviceClock(
+                stall_timeout_s=tr.device_timeout_s or None)
         audit_guard = watcher = None
         if tr.audit:
             # fail-fast enforcement of the async-loop contract: any host
@@ -168,90 +235,127 @@ class Trainer:
             from repro.analysis.sync_guard import SyncGuard
             audit_guard = SyncGuard(strict=True, label="train.audit")
             watcher = RecompileWatcher(label="run_step")
-        with sh.sharding_rules(mesh):
-            self.state = steps_lib.init_train_state(
-                self.mcfg, self.tcfg, jax.random.PRNGKey(tr.seed), tr.batch)
-            self.num_params = sum(
-                int(np.prod(l.shape)) for l in
-                jax.tree_util.tree_leaves(self.state["params"]))
-            self.start_step = 0
-            # hooks may restore state + data-pipeline position (checkpoint
-            # resume); the iterator is created only afterwards
-            self._fire("on_train_start")
-            it = iter(self.data)
-            t_start = time.time()
-            with contextlib.ExitStack() as audit_scope:
-                if audit_guard is not None:
-                    # guard covers the step loop only — state init, restore
-                    # hooks, and report assembly sync legitimately
-                    audit_scope.enter_context(audit_guard)
-                for step in range(self.start_step, tr.steps):
-                    batch_np = next(it)
-                    batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
-                    if watcher is not None:
-                        drift = watcher.observe(step=step, state=self.state,
-                                                batch=batch)
-                        if drift:
-                            raise RuntimeError(
-                                "[train.audit] " +
-                                "; ".join(f.message for f in drift))
-                    t0 = time.time()
-                    self.state, dev_metrics = run_step(self.state, batch,
-                                                       step)
-                    self.last_step_time = time.time() - t0
-                    dispatch_s += self.last_step_time
-                    if self.device_clock is not None and dev_metrics:
-                        # metrics are detached (jnp.copy) — safe for the
-                        # clock thread to hold while donated buffers are
-                        # reused
-                        self.device_clock.observe(
-                            step, dev_metrics.get(
-                                "loss", next(iter(dev_metrics.values()))))
-                    # dispatch accounting: run_step returning means step N
-                    # is ISSUED; if step N−1's metrics are still device
-                    # futures at that point, the host ran ahead of the
-                    # device queue
-                    if prev_row is not None and not prev_row.materialized:
-                        dispatched_ahead += 1
-                    metrics = MetricsFuture(dev_metrics)
-                    prev_row = metrics
-                    self._fire("on_step_end", step, metrics)
-                    history.append(metrics)
-                    if self.should_stop:
-                        break
-            wall = time.time() - t_start
-            last = history.last
-            report: Dict[str, Any] = {
-                "final_loss": last["loss"] if last is not None else None,
-                "history": history.rows(),
-                "wall_s": wall,
-                "config_hash": cfg.config_hash(),
-                "host_loop": {
-                    "steps": history.total,
-                    "dispatched_ahead": dispatched_ahead,
-                    "dispatch_s": dispatch_s,
-                },
-            }
-            if self.device_clock is not None:
-                self.device_clock.drain()
-                report["host_loop"]["device_timed_steps"] = \
-                    self.device_clock.timed_steps
-                report["host_loop"]["device_time_s"] = \
-                    self.device_clock.total_device_s
-            if audit_guard is not None:
-                report["audit"] = {
-                    "sync_events": len(audit_guard.events),
-                    "unsanctioned": len(audit_guard.violations),
-                    "sync_sites": {f"{site}:{kind}": n for (site, kind), n
-                                   in sorted(audit_guard.site_counts()
-                                             .items())},
-                    "recompiles": len(watcher.findings),
+        completed = False
+        try:
+            with sh.sharding_rules(mesh):
+                self.state = steps_lib.init_train_state(
+                    self.mcfg, self.tcfg, jax.random.PRNGKey(tr.seed),
+                    tr.batch)
+                self.num_params = sum(
+                    int(np.prod(l.shape)) for l in
+                    jax.tree_util.tree_leaves(self.state["params"]))
+                self.start_step = 0
+                # hooks may restore state + data-pipeline position
+                # (checkpoint resume); the iterator is created only after
+                self._fire("on_train_start")
+                it = iter(self.data)
+                t_start = time.time()
+                with contextlib.ExitStack() as audit_scope:
+                    if audit_guard is not None:
+                        # guard covers the step loop only — state init,
+                        # restore hooks, and report assembly sync
+                        # legitimately
+                        audit_scope.enter_context(audit_guard)
+                    step = self.start_step
+                    while step < tr.steps:
+                        if self._chaos is not None:
+                            self._chaos.fire_signals(step)
+                        batch_np = next(it)
+                        if self._chaos is not None:
+                            batch_np = self._chaos.corrupt_batch(
+                                step, batch_np)
+                        batch = {k: jnp.asarray(v)
+                                 for k, v in batch_np.items()}
+                        if watcher is not None:
+                            drift = watcher.observe(step=step,
+                                                    state=self.state,
+                                                    batch=batch)
+                            if drift:
+                                raise RuntimeError(
+                                    "[train.audit] " +
+                                    "; ".join(f.message for f in drift))
+                        t0 = time.time()
+                        self.state, dev_metrics = run_step(self.state, batch,
+                                                           step)
+                        self.last_step_time = time.time() - t0
+                        dispatch_s += self.last_step_time
+                        if self.device_clock is not None and dev_metrics:
+                            # metrics are detached (jnp.copy) — safe for
+                            # the clock thread to hold while donated
+                            # buffers are reused
+                            marker = dev_metrics.get(
+                                "loss", next(iter(dev_metrics.values())))
+                            if self._chaos is not None:
+                                marker = self._chaos.wrap_marker(step,
+                                                                 marker)
+                            self.device_clock.observe(step, marker)
+                        # dispatch accounting: run_step returning means
+                        # step N is ISSUED; if step N−1's metrics are
+                        # still device futures at that point, the host ran
+                        # ahead of the device queue
+                        if prev_row is not None and not prev_row.materialized:
+                            dispatched_ahead += 1
+                        metrics = MetricsFuture(dev_metrics)
+                        prev_row = metrics
+                        self._fire("on_step_end", step, metrics)
+                        history.append(metrics)
+                        if self._rollback_reason is not None:
+                            resumed = self._perform_rollback(step)
+                            if resumed is not None:
+                                step = resumed
+                                prev_row = None
+                                continue
+                        if self.should_stop:
+                            break
+                        step += 1
+                wall = time.time() - t_start
+                last = history.last
+                report: Dict[str, Any] = {
+                    "final_loss": last["loss"] if last is not None else None,
+                    "history": history.rows(),
+                    "wall_s": wall,
+                    "config_hash": cfg.config_hash(),
+                    "host_loop": {
+                        "steps": history.total,
+                        "dispatched_ahead": dispatched_ahead,
+                        "dispatch_s": dispatch_s,
+                    },
                 }
-            if history.dropped:
-                report["history_dropped"] = history.dropped
-            if self.stop_reason is not None:
-                report["stopped"] = self.stop_reason
-            self._fire("on_train_end", report)
-        if self.device_clock is not None:
-            self.device_clock.close()
-        return report
+                if self.device_clock is not None:
+                    self.device_clock.drain()
+                    report["host_loop"]["device_timed_steps"] = \
+                        self.device_clock.timed_steps
+                    report["host_loop"]["device_time_s"] = \
+                        self.device_clock.total_device_s
+                    if self.device_clock.stalled:
+                        report["host_loop"]["device_stalled"] = True
+                if audit_guard is not None:
+                    report["audit"] = {
+                        "sync_events": len(audit_guard.events),
+                        "unsanctioned": len(audit_guard.violations),
+                        "sync_sites": {f"{site}:{kind}": n
+                                       for (site, kind), n
+                                       in sorted(audit_guard.site_counts()
+                                                 .items())},
+                        "recompiles": len(watcher.findings),
+                    }
+                if history.dropped:
+                    report["history_dropped"] = history.dropped
+                if self.stop_reason is not None:
+                    report["stopped"] = self.stop_reason
+                if self.rollbacks:
+                    report["resilience"] = {"rollbacks": self.rollbacks}
+                self._fire("on_train_end", report)
+            completed = True
+            return report
+        finally:
+            if not completed:
+                # exiting on an exception: on_train_end never fires, but
+                # signal handlers / open files / writer threads must still
+                # be released (chaos crash tests restart in-process)
+                self._fire_abort()
+            if self._chaos is not None:
+                chaos_lib.deactivate()
+                self._chaos = None
+            if self.device_clock is not None:
+                self.device_clock.close()

@@ -2,9 +2,15 @@
 
 Production behaviors implemented:
   * atomic commits — write to ``<dir>/tmp.<step>`` then ``os.rename`` (POSIX
-    atomic), so a crash mid-save can never corrupt the latest checkpoint;
+    atomic); re-saving an existing step renames the committed dir ASIDE
+    (``step_X.old``) rather than deleting it first, so no crash instant
+    loses the committed checkpoint (``_recover`` rolls a half-commit back);
   * manifest with per-leaf checksums (adler32) verified on load;
-  * keep-last-N garbage collection;
+  * ``restore_latest_good`` — walk newest→oldest, verify checksums + the
+    manifest health stamp, quarantine corrupt dirs to ``corrupt.<step>``
+    (forensics, not deletion) and fall back to the previous step;
+  * keep-last-N garbage collection that never rotates out the newest
+    checkpoint stamped healthy — rollback always has somewhere to land;
   * async saves on a writer thread (training continues while the previous
     step serializes) with a join-on-next-save barrier;
   * emergency save on SIGTERM/SIGINT (preemption handler);
@@ -27,6 +33,8 @@ from typing import Any, Callable, Dict, Optional
 import jax
 import ml_dtypes
 import numpy as np
+
+from repro.resilience import chaos
 
 PyTree = Any
 _SEP = "/"
@@ -60,7 +68,25 @@ class CheckpointManager:
         self.keep_last_n = keep_last_n
         self.async_save = async_save
         self._thread: Optional[threading.Thread] = None
+        self._async_exc: Optional[BaseException] = None
         os.makedirs(directory, exist_ok=True)
+        self._recover()
+
+    def _recover(self) -> None:
+        """Roll back half-finished commits from a crashed writer: stale
+        ``tmp.*`` dirs are uncommitted (drop them); a ``step_X.old`` with no
+        ``step_X`` means the crash hit between the two commit renames — the
+        aside copy IS the committed checkpoint, so rename it back."""
+        for name in sorted(os.listdir(self.directory)):
+            path = os.path.join(self.directory, name)
+            if name.startswith("tmp."):
+                shutil.rmtree(path, ignore_errors=True)
+            elif name.endswith(".old"):
+                final = path[: -len(".old")]
+                if os.path.exists(final):
+                    shutil.rmtree(path, ignore_errors=True)
+                else:
+                    os.rename(path, final)
 
     # ------------------------------ save --------------------------------
     def save(self, step: int, tree: PyTree, extra: Optional[Dict] = None) -> str:
@@ -69,10 +95,19 @@ class CheckpointManager:
         flat = _flatten_with_paths(tree)
         if self.async_save:
             self._thread = threading.Thread(
-                target=self._write, args=(step, flat, extra or {}), daemon=False)
+                target=self._write_guarded, args=(step, flat, extra or {}),
+                daemon=False)
             self._thread.start()
             return os.path.join(self.directory, f"step_{step:08d}")
         return self._write(step, flat, extra or {})
+
+    def _write_guarded(self, step, flat, extra) -> None:
+        """Writer-thread wrapper: a dead writer must not pass silently —
+        its exception is re-raised from the next :meth:`wait`."""
+        try:
+            self._write(step, flat, extra)
+        except BaseException as e:          # noqa: BLE001 — surfaced later
+            self._async_exc = e
 
     def _write(self, step: int, flat: Dict[str, np.ndarray], extra: Dict) -> str:
         final = os.path.join(self.directory, f"step_{step:08d}")
@@ -91,10 +126,22 @@ class CheckpointManager:
                 "file": fname, "shape": list(arr.shape), "dtype": logical_dtype,
                 "adler32": _checksum(arr)}
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
-            json.dump(manifest, f)
+            # bare NaN/Infinity literals are invalid JSON — callers sanitize
+            # non-finite metrics (sanitize_row) before they reach a manifest
+            json.dump(manifest, f, allow_nan=False)
+        chaos.crash_point("checkpoint.pre_commit")
+        old = final + ".old"
         if os.path.exists(final):
-            shutil.rmtree(final)
+            # re-saving an existing step (rollback replay, restarted run):
+            # never a destructive window — the committed dir is renamed
+            # aside, not deleted, until the new one is in place; a crash
+            # between the renames leaves step_X.old for _recover()
+            os.rename(final, old)
+        chaos.crash_point("checkpoint.mid_commit")
         os.rename(tmp, final)                      # atomic commit
+        chaos.crash_point("checkpoint.post_commit")
+        if os.path.exists(old):
+            shutil.rmtree(old)
         self._gc()
         return final
 
@@ -102,12 +149,34 @@ class CheckpointManager:
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._async_exc is not None:
+            exc, self._async_exc = self._async_exc, None
+            raise exc
 
     def _gc(self) -> None:
+        if not self.keep_last_n:
+            return
         steps = self.all_steps()
-        for s in steps[:-self.keep_last_n] if self.keep_last_n else []:
-            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
-                          ignore_errors=True)
+        keep = set(steps[-self.keep_last_n:])
+        # never rotate out the newest step stamped healthy: if the sentinel
+        # trips after keep_last_n poisoned-but-finite saves, rollback still
+        # needs a good state to land on
+        healthy = [s for s in steps if self._healthy(s)]
+        if healthy:
+            keep.add(healthy[-1])
+        for s in steps:
+            if s not in keep:
+                shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
+                              ignore_errors=True)
+
+    def _healthy(self, step: int) -> bool:
+        """A checkpoint's manifest health stamp; unstamped (pre-sentinel or
+        externally written) checkpoints count as healthy."""
+        try:
+            health = self.manifest(step).get("extra", {}).get("health")
+        except (OSError, ValueError):
+            return False
+        return True if health is None else bool(health.get("healthy", True))
 
     # ----------------------------- restore ------------------------------
     def all_steps(self):
@@ -140,6 +209,11 @@ class CheckpointManager:
         for (pth, leaf), shard in zip(flat_target, flat_shardings):
             key = _SEP.join(_path_str(p) for p in pth)
             if key not in leaves:
+                if key.split(_SEP, 1)[0] == "health":
+                    # sentinel state added after this checkpoint was written:
+                    # keep the freshly-initialized leaf instead of failing
+                    out.append(jax.device_put(np.asarray(leaf)))
+                    continue
                 raise KeyError(f"checkpoint missing leaf '{key}'")
             meta = leaves[key]
             arr = np.load(os.path.join(path, meta["file"]))
@@ -155,6 +229,42 @@ class CheckpointManager:
             else:
                 out.append(jax.device_put(arr))
         return jax.tree_util.tree_unflatten(treedef, out)
+
+    def restore_latest_good(self, target: PyTree,
+                            sharding_tree: Optional[PyTree] = None):
+        """Restore the newest checkpoint that is both intact (checksums
+        verify) and stamped healthy, walking newest→oldest. Corrupt dirs
+        are quarantined to ``corrupt.<step>`` (kept for forensics, skipped
+        by ``all_steps``); unhealthy-stamped ones are skipped in place.
+        Returns ``(step, tree, manifest)``; raises ``FileNotFoundError``
+        when no restorable checkpoint remains."""
+        for step in reversed(self.all_steps()):
+            try:
+                manifest = self.manifest(step)
+            except (OSError, ValueError):
+                self._quarantine(step)
+                continue
+            health = manifest.get("extra", {}).get("health")
+            if health is not None and not health.get("healthy", True):
+                print(f"[ckpt] step {step} stamped unhealthy — skipping")
+                continue
+            try:
+                tree = self.restore(step, target, sharding_tree, verify=True)
+            except (OSError, ValueError, KeyError) as e:
+                print(f"[ckpt] step {step} failed verification ({e}) — "
+                      "quarantining")
+                self._quarantine(step)
+                continue
+            return step, tree, manifest
+        raise FileNotFoundError(
+            f"no healthy checkpoint under '{self.directory}'")
+
+    def _quarantine(self, step: int) -> None:
+        src = os.path.join(self.directory, f"step_{step:08d}")
+        dst = os.path.join(self.directory, f"corrupt.{step:08d}")
+        if os.path.exists(dst):
+            shutil.rmtree(dst)
+        os.rename(src, dst)
 
     def manifest(self, step: int) -> Dict:
         path = os.path.join(self.directory, f"step_{step:08d}", "manifest.json")
@@ -206,5 +316,8 @@ class EmergencySaver:
         self.should_stop = True
 
     def restore_handlers(self):
-        for sig, prev in self._prev.items():
-            signal.signal(sig, prev)
+        """Unwind the installed handlers (idempotent — ``_prev`` is cleared
+        so a second call can't re-install a stale snapshot)."""
+        prev, self._prev = self._prev, {}
+        for sig, handler in prev.items():
+            signal.signal(sig, handler)

@@ -25,6 +25,7 @@ that don't pass ``step_time`` keep the legacy between-calls clock.
 from __future__ import annotations
 
 import json
+import math
 import os
 import queue
 import threading
@@ -94,15 +95,26 @@ class DeviceClock:
     the delta between consecutive completion stamps IS the device execution
     time of the step. The first observed step has no predecessor stamp and
     is never timed, so N observed steps yield N−1 device timings.
+
+    ``stall_timeout_s`` arms a watchdog: when the stamper thread has been
+    blocked on one marker longer than the timeout, the blocking consumers
+    (:meth:`device_time`, :meth:`drain`) log the stuck step once, stop
+    waiting, and return what they have — so a wedged device degrades the
+    report to dispatch-sourced timing (``mfu_source: dispatch``) instead of
+    hanging it. The stall clears itself if the marker eventually completes.
     """
 
-    def __init__(self):
+    def __init__(self, stall_timeout_s: Optional[float] = None):
+        self.stall_timeout_s = stall_timeout_s
+        self.stalled = False
+        self._stall_warned = False
         self._q: "queue.SimpleQueue" = queue.SimpleQueue()
         self._cond = threading.Condition()
         self._times: Dict[int, float] = {}          # step → device seconds
         self._fresh: List[Tuple[int, float]] = []   # not yet poll()ed
         self._prev_t: Optional[float] = None
         self._pending = 0
+        self._waiting: Optional[Tuple[int, float]] = None  # (step, t_block)
         self._closed = False
         self._thread = threading.Thread(target=self._run, daemon=True,
                                         name="device-clock")
@@ -114,13 +126,21 @@ class DeviceClock:
             if item is None:
                 return
             step, marker = item
+            with self._cond:
+                self._waiting = (step, time.time())
             try:
-                # clock-thread blocking IS the design (off the step path)
-                jax.block_until_ready(marker)               # lint: allow
+                # clock-thread blocking IS the design (off the step path);
+                # duck-typed so chaos StallMarkers time-shift the stamp
+                if hasattr(marker, "block_until_ready"):
+                    marker.block_until_ready()              # lint: allow
+                else:
+                    jax.block_until_ready(marker)           # lint: allow
             except Exception:
                 pass                      # a failed step still advances time
             t = time.time()
             with self._cond:
+                self._waiting = None
+                self.stalled = False      # marker landed — stall cleared
                 if self._prev_t is not None:
                     dt = t - self._prev_t
                     self._times[step] = dt
@@ -128,6 +148,22 @@ class DeviceClock:
                 self._prev_t = t
                 self._pending -= 1
                 self._cond.notify_all()
+
+    def _stalled_now(self) -> bool:
+        """Watchdog check (condition must be held): has the stamper been
+        blocked on a single marker past ``stall_timeout_s``? Warns once,
+        naming the stuck step."""
+        if self.stall_timeout_s is not None and self._waiting is not None:
+            step, t0 = self._waiting
+            if time.time() - t0 >= self.stall_timeout_s:
+                self.stalled = True
+                if not self._stall_warned:
+                    self._stall_warned = True
+                    print(f"[device-clock] WARNING: step {step} marker "
+                          f"incomplete after {self.stall_timeout_s:.1f}s — "
+                          "device stall suspected; timing falls back to the "
+                          "dispatch clock (mfu_source: dispatch)", flush=True)
+        return self.stalled
 
     def observe(self, step: int, marker) -> None:
         """Register one step's device marker (must be a DETACHED array —
@@ -140,11 +176,19 @@ class DeviceClock:
 
     def device_time(self, step: int,
                     timeout: Optional[float] = None) -> Optional[float]:
-        """Device seconds for ``step``; optionally wait for the stamp."""
+        """Device seconds for ``step``; optionally wait for the stamp.
+        Returns immediately (with what exists) once the watchdog trips."""
         with self._cond:
             if timeout and step not in self._times and self._pending:
-                self._cond.wait_for(
-                    lambda: step in self._times or not self._pending, timeout)
+                deadline = time.time() + timeout
+                while (step not in self._times and self._pending
+                       and not self._stalled_now()):
+                    remaining = deadline - time.time()
+                    if remaining <= 0:
+                        break
+                    # sliced wait: a hung stamper never notifies, so the
+                    # watchdog must get re-checked on a bounded cadence
+                    self._cond.wait(min(remaining, 0.25))
             return self._times.get(step)
 
     def poll(self) -> List[Tuple[int, float]]:
@@ -154,9 +198,15 @@ class DeviceClock:
             return out
 
     def drain(self, timeout: float = 30.0) -> None:
-        """Block until every observed marker has been stamped."""
+        """Block until every observed marker has been stamped — or the
+        watchdog declares the device stalled."""
         with self._cond:
-            self._cond.wait_for(lambda: self._pending == 0, timeout)
+            deadline = time.time() + timeout
+            while self._pending and not self._stalled_now():
+                remaining = deadline - time.time()
+                if remaining <= 0:
+                    break
+                self._cond.wait(min(remaining, 0.25))
 
     @property
     def timed_steps(self) -> int:
@@ -241,6 +291,25 @@ class MetricsFuture(MutableMapping):
         if self._ready:                  # keep the materialized invariant
             self._ready = False
             self.materialize()
+
+
+def sanitize_row(row: Mapping[str, Any]) -> Dict[str, Any]:
+    """JSON-safe copy of a metrics row: non-finite floats become ``null``
+    and their keys are listed under ``nonfinite_keys``. Python's default
+    ``json.dumps`` emits bare ``NaN``/``Infinity`` literals — NOT valid
+    JSON — which breaks every strict downstream parser; a sentinel-skipped
+    step (NaN loss is recorded honestly) must not poison the stream."""
+    out: Dict[str, Any] = {}
+    bad = []
+    for k, v in row.items():
+        if isinstance(v, float) and not math.isfinite(v):
+            out[k] = None
+            bad.append(k)
+        else:
+            out[k] = v
+    if bad:
+        out["nonfinite_keys"] = sorted(bad)
+    return out
 
 
 def materialize_metrics(metrics: Mapping[str, Any]) -> Dict[str, float]:
@@ -334,7 +403,7 @@ class MetricsLogger:
                                           (dev_dt * self.num_chips *
                                            PEAK_FLOPS_PER_CHIP))
                             row["mfu_source"] = "device"
-                lines.append(json.dumps(row))
+                lines.append(json.dumps(sanitize_row(row), allow_nan=False))
         self._pending.clear()
         self.drain_s += time.time() - t0
         if self._f:

@@ -37,6 +37,11 @@ class TrainConfig:
     probe_positions: int = 256      # positions per sequence for grad embeddings
                                     # (0 = all; the paper's K×M regime is tiny)
     microbatches: int = 1           # >1: sequential accumulation (§Perf memory lever)
+    sentinel: bool = True           # on-device divergence sentinel: fused
+                                    # health word + skip-update (a poisoned
+                                    # gradient never touches params)
+    spike_z: float = 6.0            # loss-spike z-score vs the EMA carried in
+                                    # train state (0 = finite-checks only)
 
     @property
     def use_graft(self) -> bool:
@@ -46,6 +51,19 @@ class TrainConfig:
 # ---------------------------------------------------------------------------
 # state
 # ---------------------------------------------------------------------------
+
+# steps of healthy-loss EMA history required before the spike z-score may
+# veto a step — a cold EMA (mean 0, var 0) would flag the very first loss
+SENTINEL_WARMUP = 16
+
+
+def init_health() -> Dict[str, jax.Array]:
+    """Divergence-sentinel carry: loss EMA (mean/var), its sample count,
+    and the consecutive-bad-step streak — all device scalars, updated
+    inside the train step so the sentinel costs zero host syncs."""
+    return {"ema_mean": jnp.float32(0.0), "ema_var": jnp.float32(0.0),
+            "count": jnp.int32(0), "bad_streak": jnp.int32(0)}
+
 
 def init_train_state(mcfg: model_lib.ModelConfig, tcfg: TrainConfig,
                      key: jax.Array, batch_size: int) -> Dict[str, PyTree]:
@@ -58,6 +76,8 @@ def init_train_state(mcfg: model_lib.ModelConfig, tcfg: TrainConfig,
     }
     if tcfg.use_graft:
         state["graft"] = graft_lib.init_state(tcfg.graft, batch_size)
+    if tcfg.sentinel:
+        state["health"] = init_health()
     return state
 
 
@@ -94,6 +114,8 @@ def train_state_logical(mcfg, tcfg: TrainConfig, abstract_state):
     }
     if "graft" in abstract_state:
         out["graft"] = _replicated_logical(abstract_state["graft"])
+    if "health" in abstract_state:
+        out["health"] = _replicated_logical(abstract_state["health"])
     return out
 
 
@@ -283,13 +305,81 @@ def selection_step(mcfg, tcfg: TrainConfig, state, batch):
                        "proj_error": graft_state.last_error}
 
 
+def apply_sentinel(tcfg: TrainConfig, state, new_state, metrics):
+    """Fused divergence sentinel + skip-update, entirely on device.
+
+    The health word: loss and global grad norm must be finite (the norm is
+    a sum of squares over EVERY grad leaf, so one non-finite grad entry
+    anywhere poisons it — an all-leaves check for the price of a scalar),
+    and — once the loss EMA has ``SENTINEL_WARMUP`` healthy samples — the
+    loss must sit within ``spike_z`` EMA standard deviations of the mean.
+
+    Skip-update: on an unhealthy step every updated leaf (params, opt,
+    graft) is ``where``-selected back to its input value with only ``step``
+    advanced, so a poisoned gradient never touches params. On a healthy
+    step the select returns the new values bit-exactly — the sentinel is
+    trajectory-neutral (why ``train.sentinel`` is excluded from
+    ``config_hash``, like ``graft.overlap``).
+
+    The verdict rides the step's metrics (``healthy``, ``bad_streak``) and
+    the ``bad_streak`` counter in the carried health state, so the host
+    learns about divergence lazily at its existing drain boundaries — zero
+    new syncs on the step path.
+    """
+    health = state["health"]
+    loss = metrics["loss"].astype(jnp.float32)
+    finite = jnp.isfinite(loss)
+    if "grad_norm" in metrics:
+        finite = finite & jnp.isfinite(
+            metrics["grad_norm"].astype(jnp.float32))
+    mean, var = health["ema_mean"], health["ema_var"]
+    if tcfg.spike_z:
+        std = jnp.sqrt(jnp.maximum(var, 1e-6))
+        warm = health["count"] >= SENTINEL_WARMUP
+        spike = warm & (jnp.abs(loss - mean) > tcfg.spike_z * std)
+        healthy = finite & ~spike
+    else:
+        healthy = finite
+    # EMA advances on healthy steps only: a poisoned loss must never drag
+    # the reference it is judged against (the where's untaken branch may
+    # hold NaN — select drops it, nothing differentiates through this)
+    decay = jnp.float32(0.9)
+    dev = loss - mean
+    new_health = {
+        "ema_mean": jnp.where(healthy, decay * mean + (1 - decay) * loss,
+                              mean),
+        "ema_var": jnp.where(healthy, decay * var + (1 - decay) * dev * dev,
+                             var),
+        "count": jnp.where(healthy, health["count"] + 1, health["count"]),
+        "bad_streak": jnp.where(healthy, jnp.int32(0),
+                                health["bad_streak"] + 1),
+    }
+    fallback = dict(state, step=state["step"] + 1)
+    if "graft" in state:
+        fallback["graft"] = state["graft"]._replace(step=state["step"] + 1)
+    fallback.pop("health")
+    candidate = {k: v for k, v in new_state.items() if k != "health"}
+    selected = jax.tree_util.tree_map(
+        lambda n, f: jnp.where(healthy, n, f), candidate, fallback)
+    selected["health"] = new_health
+    # the step's own metrics keep their true (possibly non-finite) values —
+    # telemetry should show WHAT was skipped, not hide it
+    return selected, dict(metrics, healthy=healthy.astype(jnp.float32),
+                          bad_streak=new_health["bad_streak"])
+
+
 def make_train_step(mcfg, tcfg: TrainConfig, kind: Optional[str] = None):
     step = {None: graft_train_step if tcfg.use_graft else baseline_train_step,
             "graft": graft_train_step, "baseline": baseline_train_step,
             "subset": subset_train_step, "select": selection_step}[kind]
+    use_sentinel = tcfg.sentinel and kind != "select"
 
     def fn(state, batch):
-        return step(mcfg, tcfg, state, batch)
+        new_state, metrics = step(mcfg, tcfg, state, batch)
+        if use_sentinel and "health" in state:
+            new_state, metrics = apply_sentinel(tcfg, state, new_state,
+                                                metrics)
+        return new_state, metrics
     return fn
 
 

@@ -1,0 +1,43 @@
+"""Resilience: divergence sentinel plumbing, rollback, and chaos testing.
+
+Three cooperating pieces (see README "Fault tolerance & chaos testing"):
+
+  * the on-device divergence sentinel lives in ``launch/steps.py``
+    (``apply_sentinel``) — a fused health word + skip-update computed inside
+    the jitted train step, so a poisoned gradient never touches params and
+    the verdict rides the existing lazy metrics row (zero new host syncs);
+  * :class:`~repro.resilience.guard.DivergenceGuardCallback` consumes that
+    verdict at drain boundaries and, after ``train.bad_step_patience``
+    consecutive bad steps, asks the Trainer to roll back to the last
+    checkpoint stamped healthy (``CheckpointManager.restore_latest_good``);
+  * :mod:`~repro.resilience.chaos` is the deterministic fault-injection
+    harness (NaN batch, SIGTERM, kill-mid-save, bit-flip, stalled step)
+    driven by ``train.fault_plan`` / ``REPRO_FAULT_PLAN`` and replayed
+    bit-exactly by tests and the CI chaos job
+    (``python -m repro.resilience``).
+"""
+from repro.resilience.chaos import (ChaosCrash, FaultPlan, activate,
+                                    active_plan, crash_point, deactivate,
+                                    flip_checkpoint_leaf, load_plan)
+
+
+def __getattr__(name):
+    # guard pulls in the full api/callback stack (which itself imports the
+    # checkpoint module, which imports chaos from here) — load it lazily so
+    # `from repro.resilience import chaos` stays cycle-free and light
+    if name == "DivergenceGuardCallback":
+        from repro.resilience.guard import DivergenceGuardCallback
+        return DivergenceGuardCallback
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+__all__ = [
+    "ChaosCrash",
+    "DivergenceGuardCallback",
+    "FaultPlan",
+    "activate",
+    "active_plan",
+    "crash_point",
+    "deactivate",
+    "flip_checkpoint_leaf",
+    "load_plan",
+]

@@ -27,7 +27,6 @@ declaratively with ``ExperimentConfig.graft.overlap = True`` (excluded from
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -95,8 +94,10 @@ class OverlappedSelector:
             raise ValueError("OverlappedSelector requires TrainConfig.graft")
         self.refresh_every = tcfg.graft.refresh_every
         self._refresh = jax.jit(steps_lib.make_selection_refresh(mcfg, tcfg))
+        # make_train_step (not subset_train_step directly) so the divergence
+        # sentinel wraps this path exactly like the sequential one
         self._train = jax.jit(
-            functools.partial(steps_lib.subset_train_step, mcfg, tcfg),
+            steps_lib.make_train_step(mcfg, tcfg, kind="subset"),
             donate_argnums=(0,) if donate else ())
 
     def step(self, state: Dict[str, Any], batch,

@@ -1,0 +1,544 @@
+"""Resilience subsystem: sentinel, rollback, chaos harness, watchdog.
+
+End-to-end recovery is exercised by ``python -m repro.resilience`` (the CI
+chaos matrix); these tests pin the unit-level contracts each piece rides on
+— fault-plan determinism, the checkpoint crash window, quarantine walks,
+health-aware GC, JSONL sanitization, signal-handler hygiene, and the
+DeviceClock stall watchdog.
+"""
+import dataclasses
+import json
+import os
+import shutil
+import signal
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import ExperimentConfig, Trainer
+from repro.api.callbacks import CheckpointCallback
+from repro.checkpoint import CheckpointManager, EmergencySaver
+from repro.launch import steps as steps_lib
+from repro.launch.metrics import (DeviceClock, MetricsFuture, MetricsLogger,
+                                  sanitize_row)
+from repro.resilience import chaos
+from repro.resilience.guard import DivergenceGuardCallback
+
+
+# ---------------------------------------------------------------------------
+# fault plans
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_parsing_inline_dict_and_file(tmp_path):
+    inline = chaos.FaultPlan.from_spec('[{"kind": "sigterm", "step": 3}]')
+    assert inline.faults[0]["step"] == 3
+    single = chaos.FaultPlan.from_spec('{"kind": "nan_batch", "step": 1}')
+    assert single.faults[0]["kind"] == "nan_batch"
+    parsed = chaos.FaultPlan.from_spec([{"kind": "stall", "step": 2}])
+    assert parsed.faults[0]["kind"] == "stall"
+    p = tmp_path / "plan.json"
+    p.write_text('{"faults": [{"kind": "crash", "point": "x"}]}')
+    from_file = chaos.FaultPlan.from_spec(str(p))
+    assert from_file.faults[0]["point"] == "x"
+
+
+def test_fault_plan_rejects_unknown_kind():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        chaos.FaultPlan([{"kind": "meteor", "step": 1}])
+
+
+def test_fault_plan_env_fallback(monkeypatch):
+    monkeypatch.setenv(chaos.ENV_VAR, '[{"kind": "sigterm", "step": 9}]')
+    plan = chaos.load_plan(None)
+    assert plan is not None and plan.faults[0]["step"] == 9
+    # explicit config wins over the environment
+    plan = chaos.load_plan('[{"kind": "sigterm", "step": 1}]')
+    assert plan.faults[0]["step"] == 1
+    monkeypatch.delenv(chaos.ENV_VAR)
+    assert chaos.load_plan(None) is None
+
+
+def test_nan_batch_fault_fires_exactly_once():
+    plan = chaos.FaultPlan([{"kind": "nan_batch", "step": 4}])
+    clean = {"tokens": np.arange(6).reshape(2, 3),
+             "x": np.ones((2, 3), np.float32)}
+    assert plan.corrupt_batch(3, clean) is clean
+    poisoned = plan.corrupt_batch(4, clean)
+    assert np.all(poisoned["tokens"] >= chaos.BAD_TOKEN_ID) or \
+        np.all(poisoned["tokens"] == np.iinfo(clean["tokens"].dtype).max // 1)
+    assert np.all(np.isnan(poisoned["x"]))
+    # replaying the same step after a rollback must NOT re-poison
+    assert plan.corrupt_batch(4, clean) is clean
+
+
+def test_crash_point_skip_counter():
+    plan = chaos.FaultPlan([{"kind": "crash", "point": "p", "skip": 2}])
+    with chaos.active_plan(plan):
+        chaos.crash_point("p")      # pass 1
+        chaos.crash_point("other")  # different point: not counted
+        chaos.crash_point("p")      # pass 2
+        with pytest.raises(chaos.ChaosCrash):
+            chaos.crash_point("p")  # third hit fires
+        chaos.crash_point("p")      # fired already — inert
+    chaos.crash_point("p")          # no active plan — inert
+
+
+# ---------------------------------------------------------------------------
+# the on-device sentinel
+# ---------------------------------------------------------------------------
+
+def _sentinel_tcfg(**kw):
+    return steps_lib.TrainConfig(sentinel=True, **kw)
+
+
+def test_apply_sentinel_spike_z_detection():
+    tcfg = _sentinel_tcfg(spike_z=6.0)
+    health = {"ema_mean": jnp.float32(2.0), "ema_var": jnp.float32(0.01),
+              "count": jnp.int32(steps_lib.SENTINEL_WARMUP),
+              "bad_streak": jnp.int32(0)}
+    state = {"step": jnp.int32(5), "params": {"w": jnp.ones(3)},
+             "health": health}
+    new_state = {"step": jnp.int32(6), "params": {"w": jnp.zeros(3)}}
+
+    # a 100-sigma loss spike is unhealthy even though it is finite
+    _, m = steps_lib.apply_sentinel(tcfg, state, dict(new_state),
+                                    {"loss": jnp.float32(100.0)})
+    assert float(m["healthy"]) == 0.0
+    # a loss inside the band passes
+    sel, m = steps_lib.apply_sentinel(tcfg, state, dict(new_state),
+                                      {"loss": jnp.float32(2.01)})
+    assert float(m["healthy"]) == 1.0
+    assert float(sel["params"]["w"][0]) == 0.0      # update applied
+
+
+def test_apply_sentinel_skip_update_restores_fallback():
+    tcfg = _sentinel_tcfg(spike_z=0.0)
+    state = {"step": jnp.int32(5), "params": {"w": jnp.ones(3)},
+             "health": steps_lib.init_health()}
+    new_state = {"step": jnp.int32(6), "params": {"w": jnp.zeros(3)}}
+    sel, m = steps_lib.apply_sentinel(tcfg, state, dict(new_state),
+                                      {"loss": jnp.float32(float("nan"))})
+    assert float(m["healthy"]) == 0.0
+    np.testing.assert_array_equal(np.asarray(sel["params"]["w"]),
+                                  np.ones(3))       # update skipped
+    assert int(sel["step"]) == 6                    # but the step advances
+    assert int(sel["health"]["bad_streak"]) == 1
+
+
+def test_sentinel_state_round_trips_through_checkpoint(tmp_path):
+    """Pre-sentinel checkpoints (no health/ leaves) restore into the new
+    state layout — the fresh health leaves are kept, nothing raises."""
+    mgr = CheckpointManager(str(tmp_path))
+    old_tree = {"params": {"w": np.arange(4.0)}}
+    mgr.save(1, old_tree, extra={"train_step": 1})
+    target = {"params": {"w": jnp.zeros(4)},
+              "health": steps_lib.init_health()}
+    got = mgr.restore(1, target)
+    np.testing.assert_array_equal(np.asarray(got["params"]["w"]),
+                                  np.arange(4.0))
+    assert int(got["health"]["count"]) == 0
+
+
+# ---------------------------------------------------------------------------
+# checkpoint crash window + recovery
+# ---------------------------------------------------------------------------
+
+def test_resave_crash_between_renames_keeps_committed_step(tmp_path):
+    """The PR-8 regression test for checkpoint.py's old rmtree-before-rename
+    window: killing the writer between the two commit renames must not lose
+    the committed checkpoint for that step."""
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    mgr.save(5, {"w": np.arange(8.0)}, extra={"train_step": 5})
+    plan = chaos.FaultPlan([{"kind": "crash",
+                             "point": "checkpoint.mid_commit"}])
+    with chaos.active_plan(plan), \
+            pytest.raises(chaos.ChaosCrash):
+        mgr.save(5, {"w": np.arange(8.0) * 2}, extra={"train_step": 5})
+    # the directory holds only breadcrumbs now; a fresh manager recovers
+    mgr2 = CheckpointManager(str(tmp_path))
+    assert mgr2.all_steps() == [5]
+    got = mgr2.restore(5, {"w": np.zeros(8)})
+    np.testing.assert_array_equal(np.asarray(got["w"]), np.arange(8.0))
+
+
+def test_recover_drops_stale_tmp_and_redundant_old(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    mgr.save(3, {"w": np.ones(2)}, extra={})
+    os.makedirs(tmp_path / "tmp.9.123")
+    final = tmp_path / "step_00000003"
+    shutil.copytree(final, tmp_path / "step_00000003.old")
+    mgr2 = CheckpointManager(str(tmp_path))
+    names = sorted(os.listdir(tmp_path))
+    assert "tmp.9.123" not in names
+    assert "step_00000003.old" not in names
+    assert mgr2.all_steps() == [3]
+
+
+def test_async_writer_failure_surfaces_on_wait(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=True)
+    plan = chaos.FaultPlan([{"kind": "crash",
+                             "point": "checkpoint.pre_commit"}])
+    with chaos.active_plan(plan):
+        mgr.save(1, {"w": np.ones(2)}, extra={})
+        with pytest.raises(chaos.ChaosCrash):
+            mgr.wait()
+    mgr.wait()                       # exception is one-shot
+    assert CheckpointManager(str(tmp_path)).all_steps() == []
+
+
+# ---------------------------------------------------------------------------
+# restore_latest_good / quarantine / GC
+# ---------------------------------------------------------------------------
+
+def _save_steps(mgr, steps, health=None):
+    for s in steps:
+        extra = {"train_step": s}
+        if health and s in health:
+            extra["health"] = health[s]
+        mgr.save(s, {"w": np.full(4, float(s))}, extra=extra)
+
+
+def test_restore_latest_good_quarantines_corrupt_intermediate(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep_last_n=0, async_save=False)
+    _save_steps(mgr, [1, 2, 3])
+    chaos.flip_checkpoint_leaf(str(tmp_path), 3, "w")
+    step, tree, manifest = mgr.restore_latest_good({"w": np.zeros(4)})
+    assert step == 2 and manifest["extra"]["train_step"] == 2
+    np.testing.assert_array_equal(np.asarray(tree["w"]), np.full(4, 2.0))
+    assert "corrupt.00000003" in os.listdir(tmp_path)
+    # quarantined dirs are invisible to the step walk
+    assert mgr.all_steps() == [1, 2]
+
+
+def test_restore_latest_good_skips_unhealthy_stamp(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep_last_n=0, async_save=False)
+    _save_steps(mgr, [1, 2, 3],
+                health={3: {"healthy": False, "bad_streak": 4}})
+    step, tree, _ = mgr.restore_latest_good({"w": np.zeros(4)})
+    assert step == 2
+    # unhealthy-but-intact checkpoints are skipped, NOT quarantined
+    assert mgr.all_steps() == [1, 2, 3]
+
+
+def test_restore_latest_good_exhausted_raises(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep_last_n=0, async_save=False)
+    _save_steps(mgr, [1])
+    chaos.flip_checkpoint_leaf(str(tmp_path), 1, "w")
+    with pytest.raises(FileNotFoundError):
+        mgr.restore_latest_good({"w": np.zeros(4)})
+
+
+def test_restore_onto_different_keep_last_n_with_corrupt_step(tmp_path):
+    """Elastic-restore edge: a manager with different retention policy
+    reads the same directory, falls over the corrupt newest step, and
+    restores the prior one."""
+    writer = CheckpointManager(str(tmp_path), keep_last_n=5,
+                               async_save=False)
+    _save_steps(writer, [1, 2, 3, 4])
+    chaos.flip_checkpoint_leaf(str(tmp_path), 4, "w")
+    reader = CheckpointManager(str(tmp_path), keep_last_n=1,
+                               async_save=False)
+    step, tree, _ = reader.restore_latest_good({"w": np.zeros(4)})
+    assert step == 3
+    np.testing.assert_array_equal(np.asarray(tree["w"]), np.full(4, 3.0))
+
+
+def test_gc_preserves_newest_healthy_ancestor(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep_last_n=2, async_save=False)
+    _save_steps(mgr, [1, 2, 3, 4],
+                health={1: {"healthy": True},
+                        2: {"healthy": True},
+                        3: {"healthy": False, "bad_streak": 2},
+                        4: {"healthy": False, "bad_streak": 3}})
+    # keep-last-2 would retain only {3, 4} — both unhealthy; the GC must
+    # also keep step 2, the newest healthy state rollback can land on
+    assert mgr.all_steps() == [2, 3, 4]
+
+
+def test_manifest_rejects_bare_nan(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    with pytest.raises(ValueError):
+        mgr.save(1, {"w": np.ones(2)},
+                 extra={"metrics": {"loss": float("nan")}})
+    # the sanitized form (what CheckpointCallback writes) goes through
+    mgr.save(1, {"w": np.ones(2)},
+             extra={"metrics": sanitize_row({"loss": float("nan")})})
+    m = CheckpointManager(str(tmp_path)).manifest(1)
+    assert m["extra"]["metrics"]["loss"] is None
+    assert m["extra"]["metrics"]["nonfinite_keys"] == ["loss"]
+
+
+# ---------------------------------------------------------------------------
+# JSONL telemetry sanitization
+# ---------------------------------------------------------------------------
+
+def test_sanitize_row_nonfinite_to_null():
+    row = {"step": 3, "loss": float("nan"), "mfu": float("inf"),
+           "ok": 1.5, "name": "x"}
+    out = sanitize_row(row)
+    assert out["loss"] is None and out["mfu"] is None
+    assert out["ok"] == 1.5 and out["name"] == "x"
+    assert out["nonfinite_keys"] == ["loss", "mfu"]
+    assert "nonfinite_keys" not in sanitize_row({"loss": 1.0})
+
+
+def test_metrics_logger_rows_round_trip_json(tmp_path):
+    path = str(tmp_path / "m.jsonl")
+    logger = MetricsLogger(path, flush_every=2)
+    logger.log(0, MetricsFuture({"loss": jnp.float32(1.5)}), tokens=8)
+    logger.log(1, MetricsFuture({"loss": jnp.float32(float("nan")),
+                                 "grad_norm": jnp.float32(float("inf"))}),
+               tokens=8)
+    logger.close()
+    rows = [json.loads(line) for line in open(path)]   # raises on bare NaN
+    assert rows[0]["loss"] == 1.5
+    assert rows[1]["loss"] is None
+    assert set(rows[1]["nonfinite_keys"]) == {"loss", "grad_norm"}
+
+
+# ---------------------------------------------------------------------------
+# DeviceClock stall watchdog
+# ---------------------------------------------------------------------------
+
+class _StuckMarker:
+    """Marker whose completion never arrives until released."""
+
+    def __init__(self):
+        self.release = threading.Event()
+
+    def block_until_ready(self):
+        self.release.wait(10.0)
+
+
+def test_device_clock_watchdog_unblocks_consumers():
+    clock = DeviceClock(stall_timeout_s=0.2)
+    stuck = _StuckMarker()
+    clock.observe(0, stuck)
+    t0 = time.time()
+    clock.drain(timeout=8.0)
+    waited = time.time() - t0
+    assert waited < 4.0, f"drain blocked {waited:.1f}s despite watchdog"
+    assert clock.stalled
+    assert clock.device_time(0, timeout=5.0) is None
+    stuck.release.set()              # let the stamper thread finish
+    deadline = time.time() + 5.0
+    while clock.stalled and time.time() < deadline:
+        time.sleep(0.05)
+    assert not clock.stalled         # completion clears the stall flag
+    clock.close()
+
+
+def test_device_clock_without_timeout_unaffected():
+    clock = DeviceClock()
+    for s in range(3):
+        clock.observe(s, jnp.float32(s))
+    clock.drain(timeout=5.0)
+    assert clock.timed_steps == 2    # N observed → N−1 deltas
+    assert not clock.stalled
+    clock.close()
+
+
+def test_stall_fault_marks_dispatch_fallback(tmp_path):
+    """A chaos-stalled step trips the watchdog; telemetry for that window
+    keeps the dispatch clock (mfu_source: dispatch), and the run is not
+    blocked."""
+    plan = json.dumps([{"kind": "stall", "step": 2, "seconds": 3.0}])
+    cfg = ExperimentConfig().apply_overrides([
+        "train.steps=6", "train.batch=4", "train.seq=16",
+        "train.log_every=0", "train.metrics_flush_every=2",
+        f"train.metrics_path={tmp_path / 'm.jsonl'}",
+        "train.device_timeout_s=0.3", "graft=none",
+        "train.sampler=random", f"train.fault_plan={plan}"])
+    t0 = time.time()
+    report = Trainer(cfg).fit()
+    assert time.time() - t0 < 60
+    assert report["host_loop"].get("device_stalled") is True
+    rows = [json.loads(line) for line in open(tmp_path / "m.jsonl")]
+    stalled_window = [r for r in rows if r["step"] >= 2
+                      and r.get("mfu_source") == "dispatch"]
+    assert stalled_window, "no dispatch-sourced row in the stalled window"
+
+
+# ---------------------------------------------------------------------------
+# signal-handler hygiene: two trainers, one process
+# ---------------------------------------------------------------------------
+
+def test_two_trainers_one_process_no_stale_handlers(tmp_path):
+    before_term = signal.getsignal(signal.SIGTERM)
+    before_int = signal.getsignal(signal.SIGINT)
+    plan = json.dumps([{"kind": "sigterm", "step": 2}])
+    common = ["train.steps=4", "train.batch=4", "train.seq=16",
+              "train.log_every=0", "graft=none", "train.sampler=random"]
+    cfg1 = ExperimentConfig().apply_overrides(
+        common + [f"train.fault_plan={plan}",
+                  f"train.checkpoint_dir={tmp_path / 'ck'}"])
+    rep1 = Trainer(cfg1).fit()
+    assert rep1.get("stopped") == "preempted"
+    # handlers unwound → process defaults back in place
+    assert signal.getsignal(signal.SIGTERM) is before_term
+    assert signal.getsignal(signal.SIGINT) is before_int
+    # a second fit in the same process must not inherit the stop flag
+    cfg2 = ExperimentConfig().apply_overrides(common)
+    rep2 = Trainer(cfg2).fit()
+    assert "stopped" not in rep2
+    assert rep2["host_loop"]["steps"] == 4
+    assert signal.getsignal(signal.SIGTERM) is before_term
+
+
+def test_emergency_saver_restore_is_idempotent():
+    before = signal.getsignal(signal.SIGTERM)
+    saver = EmergencySaver(signals=(signal.SIGTERM,))
+    saver.restore_handlers()
+    saver.restore_handlers()         # second call is a no-op, not a stale
+    assert signal.getsignal(signal.SIGTERM) is before
+
+
+def test_abort_releases_handlers_and_flushes_metrics(tmp_path):
+    """A chaos crash aborts fit() before on_train_end — the abort hooks
+    must still unwind signal handlers and flush the JSONL tail."""
+    before = signal.getsignal(signal.SIGTERM)
+    plan = json.dumps([{"kind": "crash", "point": "checkpoint.pre_commit"}])
+    cfg = ExperimentConfig().apply_overrides([
+        "train.steps=6", "train.batch=4", "train.seq=16",
+        "train.log_every=0", "graft=none", "train.sampler=random",
+        f"train.checkpoint_dir={tmp_path / 'ck'}",
+        "train.checkpoint_every=2", "train.metrics_flush_every=100",
+        f"train.metrics_path={tmp_path / 'm.jsonl'}",
+        f"train.fault_plan={plan}"])
+    with pytest.raises(chaos.ChaosCrash):
+        Trainer(cfg).fit()
+    assert signal.getsignal(signal.SIGTERM) is before
+    rows = [json.loads(line) for line in open(tmp_path / "m.jsonl")]
+    assert rows, "buffered metrics were lost on abort"
+
+
+# ---------------------------------------------------------------------------
+# guard + rollback semantics
+# ---------------------------------------------------------------------------
+
+class _FakeTrainer:
+    def __init__(self):
+        self.sentinel_tripped = False
+        self.rollback_reasons = []
+
+    def request_rollback(self, reason):
+        self.rollback_reasons.append(reason)
+
+
+def test_guard_consumes_materialized_rows_for_free():
+    guard = DivergenceGuardCallback(patience=2, check_every=100)
+    tr = _FakeTrainer()
+    for step in range(3):
+        row = MetricsFuture({"healthy": jnp.float32(1.0),
+                             "bad_streak": jnp.float32(0.0),
+                             "loss": jnp.float32(1.0)})
+        row.materialize()
+        guard.on_step_end(tr, step, row)
+    assert not tr.rollback_reasons and guard.bad_steps == 0
+    bad = MetricsFuture({"healthy": jnp.float32(0.0),
+                         "bad_streak": jnp.float32(2.0),
+                         "loss": jnp.float32(float("nan"))})
+    bad.materialize()
+    guard.on_step_end(tr, 3, bad)
+    assert tr.sentinel_tripped
+    assert tr.rollback_reasons and "bad_streak 2" in tr.rollback_reasons[0]
+
+
+def test_guard_force_drains_aged_rows():
+    guard = DivergenceGuardCallback(patience=1, check_every=2)
+    tr = _FakeTrainer()
+    rows = [MetricsFuture({"healthy": jnp.float32(1.0),
+                           "bad_streak": jnp.float32(0.0)})
+            for _ in range(4)]
+    for step, row in enumerate(rows):
+        guard.on_step_end(tr, step, row)
+    # rows older than check_every steps were drained even though no other
+    # consumer materialized them
+    assert rows[0].materialized and rows[1].materialized
+    assert not tr.rollback_reasons
+
+
+def test_guard_ignores_runs_without_sentinel():
+    guard = DivergenceGuardCallback(patience=1, check_every=1)
+    tr = _FakeTrainer()
+    guard.on_step_end(tr, 0, MetricsFuture({"loss": jnp.float32(1.0)}))
+    assert not guard._pending and not tr.rollback_reasons
+
+
+def test_checkpoint_callback_refuses_save_while_tripped(tmp_path):
+    cb = CheckpointCallback(str(tmp_path / "ck"), every=1)
+
+    class _T:
+        pass
+
+    t = _T()
+    t.sentinel_tripped = True
+    t.should_stop = False
+    t.config = ExperimentConfig().apply_overrides(["train.steps=4"])
+    cb.on_step_end(t, 0, MetricsFuture({"loss": jnp.float32(1.0)}))
+    assert cb.manager.all_steps() == []
+
+
+def test_rollback_replay_is_bit_exact_for_three_steps(tmp_path):
+    """Resume-after-rollback lands on the exact pre-fault trajectory: the
+    three steps after the restore point match a clean resume from the same
+    checkpoint bit-for-bit."""
+    ck = tmp_path / "ck"
+    # fault at step 10: rows 10-11 flush at step 11, the guard trips and
+    # rolls back to checkpoint 9 — which keep-last-2 still retains at the
+    # end of the run (unlike an early checkpoint, which GC would drop)
+    plan = json.dumps([{"kind": "nan_batch", "step": 10}])
+    cfg = ExperimentConfig().apply_overrides([
+        "train.steps=12", "train.batch=8", "train.seq=16",
+        "train.log_every=0", f"train.checkpoint_dir={ck}",
+        "train.checkpoint_every=3", "train.metrics_flush_every=2",
+        f"train.metrics_path={tmp_path / 'm.jsonl'}",
+        "train.bad_step_patience=1", "graft.rset=[2,4]",
+        "graft.refresh_every=3", f"train.fault_plan={plan}"])
+    report = Trainer(cfg).fit()
+    rollbacks = report["resilience"]["rollbacks"]
+    assert len(rollbacks) == 1
+    to_step = rollbacks[0]["to_step"]
+
+    # per-step losses after the rollback (the LAST occurrence of each step
+    # in the stream is the replayed, healthy one)
+    rows = [json.loads(line) for line in open(tmp_path / "m.jsonl")]
+    replayed = {}
+    for r in rows:
+        replayed[r["step"]] = r["loss"]
+
+    twin_dir = tmp_path / "twin"
+    os.makedirs(twin_dir)
+    shutil.copytree(ck / f"step_{to_step:08d}",
+                    twin_dir / f"step_{to_step:08d}")
+    twin_metrics = tmp_path / "twin.jsonl"
+    from repro.checkpoint import load_experiment
+    twin_cfg = load_experiment(str(twin_dir))
+    twin_cfg = dataclasses.replace(twin_cfg, train=dataclasses.replace(
+        twin_cfg.train, stop_after=None, fault_plan=None,
+        checkpoint_dir=str(twin_dir), metrics_path=str(twin_metrics),
+        metrics_flush_every=2))
+    twin_report = Trainer(twin_cfg).fit()
+    twin_rows = {r["step"]: r["loss"]
+                 for r in (json.loads(line) for line in open(twin_metrics))}
+    for step in range(to_step, min(to_step + 3, 12)):
+        assert replayed[step] == twin_rows[step], \
+            f"step {step}: {replayed[step]} != {twin_rows[step]}"
+    assert report["final_loss"] == twin_report["final_loss"]
+
+
+def test_rollback_without_checkpoints_stops_run(tmp_path):
+    plan = json.dumps([{"kind": "nan_batch", "step": 2}])
+    cfg = ExperimentConfig().apply_overrides([
+        "train.steps=8", "train.batch=4", "train.seq=16",
+        "train.log_every=0", "graft=none", "train.sampler=random",
+        "train.bad_step_patience=1", "train.metrics_flush_every=1",
+        f"train.metrics_path={tmp_path / 'm.jsonl'}",
+        f"train.fault_plan={plan}"])
+    report = Trainer(cfg).fit()
+    assert report.get("stopped") == "diverged"
+    assert report["host_loop"]["steps"] < 8
