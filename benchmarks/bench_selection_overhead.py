@@ -330,6 +330,54 @@ def collect(quick: bool = False) -> Tuple[List[str], Dict[str, Any]]:
         rows.append(csv_row(f"sampler_{name}_K{K}_d{dv}", t, "registry-engine"))
     report["samplers_wall_us"] = samplers
 
+    # ------------------------------------------------------------------
+    # streaming reservoir: the cross-batch sketch refresh must keep the
+    # single-dispatch contract (ONE pallas_call, no extra gathers) and its
+    # reservoir-update overhead (FD eigh + EMA blend) is tracked as a
+    # compiled-FLOPs delta over the per-batch GRAFT refresh
+    # ------------------------------------------------------------------
+    from repro.selection import CarrySpec, SelectionInputs
+
+    smp_stream = registry.get_sampler("streaming_graft")
+    smp_graft = registry.get_sampler("graft")
+    cfg_sp = GraftConfig(rset=(8, 16, 32), eps=0.25, use_pallas=True,
+                         streaming=True)
+    carry0 = smp_stream.init_carry(cfg_sp,
+                                   CarrySpec(batch_size=K, grad_dim=dv))
+
+    def stream_refresh(v, g, gb, c):
+        return smp_stream.select_fn(cfg_sp, SelectionInputs(v, g, gb), c,
+                                    jnp.int32(0))
+
+    def batch_refresh(v, g, gb):
+        return smp_graft.fn(cfg_sp, SelectionInputs(v, g, gb), jnp.int32(0))
+
+    stream_disp = _dispatch_entry(
+        _count_primitives(stream_refresh, V, G, g_bar, carry0))
+    batch_disp = _dispatch_entry(
+        _count_primitives(batch_refresh, V, G, g_bar))
+    f_stream = _flops(stream_refresh, V, G, g_bar, carry0)
+    f_batch = _flops(batch_refresh, V, G, g_bar)
+    report["streaming"] = {
+        "sketch_rows": cfg_sp.sketch_rows,
+        "dispatch": {"streaming": stream_disp, "per_batch": batch_disp},
+        "flops": {"streaming": f_stream, "per_batch": f_batch,
+                  "reservoir_update": f_stream - f_batch},
+        "wall_us": {
+            "streaming": timed(jax.jit(stream_refresh), V, G, g_bar, carry0),
+            "per_batch": timed(jax.jit(batch_refresh), V, G, g_bar)},
+    }
+    rows.append(csv_row(
+        "streaming_dispatch", 0.0,
+        f"pallas_calls={stream_disp['pallas_call']}"
+        f";gathers={stream_disp['gather']}"
+        f";per_batch_pallas_calls={batch_disp['pallas_call']}"))
+    rows.append(csv_row(
+        "streaming_reservoir_flops",
+        report["streaming"]["wall_us"]["streaming"],
+        f"update={f_stream - f_batch:.3e}"
+        f";streaming={f_stream:.3e};per_batch={f_batch:.3e}"))
+
     # derived scaling exponents (log-log slope)
     def slope(prefixes, var_vals):
         ts = [next(e["wall_us"] for e in scaling if e["name"] == p)
@@ -381,6 +429,23 @@ def check(report: Dict[str, Any]) -> List[str]:
         problems.append(
             f"flushed metrics mfu_source={stall.get('mfu_source')!r}, "
             "expected 'device' — mfu fell back to the dispatch clock")
+    stream = report.get("streaming", {})
+    sdisp = stream.get("dispatch", {}).get("streaming", {})
+    bdisp = stream.get("dispatch", {}).get("per_batch", {})
+    if sdisp.get("pallas_call") != 1:
+        problems.append(
+            f"streaming refresh dispatches {sdisp.get('pallas_call')} "
+            "pallas_call — the reservoir update broke the single-dispatch "
+            "contract (must stay ONE fused launch)")
+    if sdisp.get("gather", 0) > bdisp.get("gather", 0):
+        problems.append(
+            f"streaming refresh adds gathers over per-batch GRAFT "
+            f"({sdisp.get('gather')} vs {bdisp.get('gather')}) — the "
+            "sketch update must stay gather-free")
+    if stream.get("flops", {}).get("reservoir_update", 0.0) <= 0.0:
+        problems.append(
+            "streaming reservoir-update FLOPs delta is non-positive — the "
+            "bench is no longer measuring the FD update")
     attn = report.get("attention", {})
     if attn.get("forward_pallas_call") != attn.get("layers"):
         problems.append(

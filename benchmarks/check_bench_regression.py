@@ -131,6 +131,31 @@ def compare(baseline: Dict[str, Any], current: Dict[str, Any],
             check("attention.train_step_flops.flash", b, c,
                   c > b * (1 + tol), f"compiled FLOPs grew > {tol:.0%}")
 
+    # --- streaming reservoir: launches exact, update FLOPs tol-gated -----
+    base_stream = baseline.get("streaming")
+    if base_stream is not None:
+        cur_stream = current.get("streaming")
+        if cur_stream is None:
+            problems.append("streaming missing from the current report")
+        else:
+            for path in sorted(base_stream.get("dispatch", {})):
+                cur = cur_stream.get("dispatch", {}).get(path)
+                if cur is None:
+                    problems.append(f"streaming.dispatch['{path}'] missing "
+                                    "from the current report")
+                    continue
+                r, p = monotone_count_rows(
+                    f"streaming.{path}", base_stream["dispatch"][path], cur,
+                    ("pallas_call", "gather"),
+                    "streaming refresh dispatch count increased")
+                rows.extend(r)
+                problems.extend(p)
+            b = float(base_stream["flops"]["reservoir_update"])
+            c = float(cur_stream.get("flops", {}).get("reservoir_update", 0))
+            check("streaming.flops.reservoir_update", b, c,
+                  c > b * (1 + tol),
+                  f"reservoir-update FLOPs grew > {tol:.0%}")
+
     cur_scaling = {e["name"]: e for e in current.get("scaling", [])}
     for entry in baseline.get("scaling", []):
         cur = cur_scaling.get(entry["name"])

@@ -37,6 +37,9 @@ RULES: Dict[str, tuple] = {
                        "dispatch/device clock is required"),
     "LN003": ("error", "pallas_call outside kernels/ (kernel launches must "
                        "live behind the kernels API)"),
+    "SP001": ("error", "registered sampler closes over mutable Python state "
+                       "(cross-step state must flow through the Sampler-v2 "
+                       "carry, or rollback/resume silently desyncs)"),
 }
 
 

@@ -4,10 +4,12 @@ CI ``analysis`` job run.
 Four sections, each returning findings in the shared report format:
 
   * **lint**   — the AST rules over every module under ``src/repro``;
-  * **jaxpr**  — trace the fused selection refresh and the flash-attention
-    model against the declarative contracts (1 ``pallas_call`` per fused
-    refresh with no gather, 1 per attention layer, no host callbacks or
-    f64 ops in either step function);
+  * **jaxpr**  — trace the fused selection refresh, the streaming
+    (sketch-reservoir) refresh, and the flash-attention model against the
+    declarative contracts (1 ``pallas_call`` per fused refresh with no
+    gather — streaming included, 1 per attention layer, no host callbacks
+    or f64 ops in either step function), plus the SP001 sweep: no
+    registered sampler may close over mutable Python state;
   * **vmem**   — static footprint/divisibility for the production kernel
     configurations, with headroom notes;
   * **runtime** — a short REAL ``Trainer.fit`` on the probe config with
@@ -60,6 +62,88 @@ def check_fused_selection() -> Report:
     return jaxpr_audit.audit_step(
         fused, (V, G, g_bar), label="fused_selection_refresh",
         extra_rules=jaxpr_audit.fused_selection_rules())
+
+
+def check_streaming_selection() -> Report:
+    """PR 9's contract: the streaming (sketch-reservoir) refresh reuses the
+    fused dispatch — ONE ``pallas_call`` for the whole select, and the
+    reservoir update adds no gathers beyond the per-batch GRAFT epilogue
+    (``select_rank``'s candidate lookup, shared by both paths)."""
+    from repro.selection import (CarrySpec, GraftConfig, SelectionInputs,
+                                 get_sampler)
+
+    rng = np.random.default_rng(0)
+    cfg = GraftConfig(rset=(8, 16, 32), eps=0.25, use_pallas=True,
+                      streaming=True)
+    V = jnp.asarray(rng.normal(size=(_SEL_K, _SEL_R)).astype(np.float32))
+    G = jnp.asarray(rng.normal(size=(_SEL_D, _SEL_K)).astype(np.float32))
+    g_bar = jnp.mean(G, axis=1)
+    smp = get_sampler("streaming_graft")
+    carry = smp.init_carry(cfg, CarrySpec(batch_size=_SEL_K,
+                                          grad_dim=_SEL_D))
+
+    def streaming(v, g, gb, c):
+        return smp.select_fn(cfg, SelectionInputs(v, g, gb), c, jnp.int32(0))
+
+    def per_batch(v, g, gb):
+        return get_sampler("graft").fn(cfg, SelectionInputs(v, g, gb),
+                                       jnp.int32(0))
+
+    gather_budget = jaxpr_audit.count_primitives(
+        per_batch, V, G, g_bar).get("gather", 0)
+    rules = [
+        jaxpr_audit.PrimitiveRule(
+            "pallas_call", exact=1, rule="JX003",
+            why="the streaming refresh (sketch update + blended-target "
+                "select) must stay a single fused kernel launch",
+            fix_hint="keep streaming_select_fn on graft.pivot_and_sweep — "
+                     "do not add a second dispatch for the reservoir"),
+        jaxpr_audit.PrimitiveRule(
+            "gather", max_count=gather_budget, rule="JX004",
+            why=f"the reservoir update must add no gathers over the "
+                f"per-batch GRAFT select (budget {gather_budget} from the "
+                f"shared rank-decision epilogue)",
+            fix_hint="express the FD sketch update with slices/matmuls, "
+                     "not fancy indexing"),
+    ]
+    return jaxpr_audit.audit_step(
+        streaming, (V, G, g_bar, carry), label="streaming_selection_refresh",
+        extra_rules=rules)
+
+
+def check_sampler_closures() -> Report:
+    """SP001: no registered sampler may smuggle cross-step state through a
+    closed-over mutable (list/dict/set/bytearray) — under jit it would be
+    baked at trace time, and rollback/resume could never restore it. The
+    Sampler-v2 carry is the only sanctioned channel."""
+    from repro.selection import available, get_sampler
+
+    mutable = (list, dict, set, bytearray)
+    report = Report()
+    for name in available():
+        smp = get_sampler(name)
+        for attr in ("fn", "select_fn", "init_carry_fn"):
+            fn = getattr(smp, attr)
+            cells = getattr(fn, "__closure__", None) or ()
+            for cell in cells:
+                try:
+                    value = cell.cell_contents
+                except ValueError:       # empty cell
+                    continue
+                if isinstance(value, mutable):
+                    report.add(Finding(
+                        rule="SP001", location=f"sampler '{name}'.{attr}",
+                        message=f"closes over mutable "
+                                f"{type(value).__name__}: {value!r:.80}",
+                        fix_hint="thread the state through init_carry_fn/"
+                                 "select_fn (Sampler-v2 carry) so it rides "
+                                 "the train state and checkpoints"))
+    if report.ok:
+        report.add(Finding(
+            rule="SP001", severity="info", location="selection.registry",
+            message=f"no mutable closures across "
+                    f"{len(available())} registered samplers"))
+    return report
 
 
 def check_attention() -> Report:
@@ -161,6 +245,8 @@ def run_all(runtime: bool = True,
     report = Report()
     report.extend(check_lint())
     report.extend(check_fused_selection())
+    report.extend(check_streaming_selection())
+    report.extend(check_sampler_closures())
     report.extend(check_attention())
     report.extend(check_vmem())
     if runtime:

@@ -197,9 +197,14 @@ class ExperimentConfig:
                 + "; ".join(mismatches)
                 + " — fix the fields, or re-derive by putting model/train "
                 f"overrides BEFORE data.source={entry.name}")
+        sampler = tr.sampler
+        if cfg.graft is not None and cfg.graft.streaming and sampler == "graft":
+            # graft.streaming=true is declarative shorthand for the
+            # streaming sampler; an explicit non-default sampler wins
+            sampler = "streaming_graft"
         tcfg = steps_lib.TrainConfig(
             optimizer=cfg.optimizer, graft=cfg.graft,
-            sampler=tr.sampler,
+            sampler=sampler,
             probe_positions=tr.probe_positions,
             microbatches=tr.microbatches,
             sentinel=tr.sentinel, spike_z=tr.spike_z)
@@ -267,6 +272,15 @@ class ExperimentConfig:
             # dispatch-schedule knobs: the overlapped and sequential paths
             # produce the same trajectory (tested), so they share a hash
             d["graft"].pop("overlap", None)
+            # the streaming-reservoir knobs only shape the trajectory when
+            # the streaming sampler is actually selected; popping them
+            # otherwise keeps pre-streaming configs' hashes stable
+            streaming_on = (d["graft"].get("streaming")
+                            or d["train"].get("sampler") == "streaming_graft")
+            if not streaming_on:
+                for f in ("streaming", "sketch_rows", "sketch_decay",
+                          "stream_mix"):
+                    d["graft"].pop(f, None)
         blob = json.dumps(d, sort_keys=True).encode()
         return hashlib.sha256(blob).hexdigest()[:12]
 

@@ -209,9 +209,10 @@ class CheckpointManager:
         for (pth, leaf), shard in zip(flat_target, flat_shardings):
             key = _SEP.join(_path_str(p) for p in pth)
             if key not in leaves:
-                if key.split(_SEP, 1)[0] == "health":
-                    # sentinel state added after this checkpoint was written:
-                    # keep the freshly-initialized leaf instead of failing
+                if key.split(_SEP, 1)[0] in ("health", "sampler_carry"):
+                    # state sections added after this checkpoint was written
+                    # (the divergence sentinel, the Sampler-v2 carry): keep
+                    # the freshly-initialized leaf instead of failing
                     out.append(jax.device_put(np.asarray(leaf)))
                     continue
                 raise KeyError(f"checkpoint missing leaf '{key}'")

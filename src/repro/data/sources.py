@@ -48,6 +48,7 @@ import numpy as np
 
 from repro.data.pipeline import (ArraySpec, DataConfig, DataSourceBase,
                                  SyntheticLM, zipf_class_probs)
+from repro.registry import Registry
 
 
 # ---------------------------------------------------------------------------
@@ -82,30 +83,29 @@ class SourceEntry:
     task: TaskAdapter
 
 
-_SOURCES: Dict[str, SourceEntry] = {}
+# generic registry (repro.registry) — shared register/get/available
+# semantics with the sampler and feature/grad-source registries
+_SOURCES: Registry = Registry("data source")
 
 
 def register_source(entry: SourceEntry, *, overwrite: bool = False) -> SourceEntry:
-    if not overwrite and entry.name in _SOURCES:
-        raise ValueError(f"data source '{entry.name}' already registered")
+    # source-specific invariant on top of the generic registry: the tagged
+    # config section resolves by config CLASS, so two sources must never
+    # share one
     for other in _SOURCES.values():
         if other.name != entry.name and other.config_cls is entry.config_cls:
             raise ValueError(
                 f"config class {entry.config_cls.__name__} already tags "
                 f"source '{other.name}' — one config class per source")
-    _SOURCES[entry.name] = entry
-    return entry
+    return _SOURCES.register(entry.name, entry, overwrite=overwrite)
 
 
 def get_source(name: str) -> SourceEntry:
-    if name not in _SOURCES:
-        raise KeyError(f"unknown data source '{name}'; "
-                       f"available: {available_sources()}")
-    return _SOURCES[name]
+    return _SOURCES.get(name)
 
 
 def available_sources() -> Tuple[str, ...]:
-    return tuple(sorted(_SOURCES))
+    return _SOURCES.available()
 
 
 def entry_for_config(dcfg: Any) -> SourceEntry:

@@ -65,6 +65,21 @@ def init_health() -> Dict[str, jax.Array]:
             "count": jnp.int32(0), "bad_streak": jnp.int32(0)}
 
 
+def init_sampler_carry(mcfg, tcfg: TrainConfig, params, batch_size: int):
+    """The registry sampler's initial cross-step state (Sampler-v2 carry).
+
+    ``{}`` for the stateless strategies; the (L, d) sketch reservoir for
+    ``streaming_graft``. The gradient-embedding width d comes from the
+    registered grad source (``embed_dim``), so the carry is sized before
+    any batch exists — shape-only, safe under ``eval_shape``.
+    """
+    smp = sampler_registry.get_sampler(tcfg.sampler)
+    grad_source = sources_lib.resolve_grad_source(tcfg.graft.grad_mode)
+    spec = selection_base.CarrySpec(
+        batch_size=batch_size, grad_dim=grad_source.embed_dim(mcfg, params))
+    return smp.init_carry(tcfg.graft, spec)
+
+
 def init_train_state(mcfg: model_lib.ModelConfig, tcfg: TrainConfig,
                      key: jax.Array, batch_size: int) -> Dict[str, PyTree]:
     params = model_lib.init_params(mcfg, key)
@@ -76,6 +91,8 @@ def init_train_state(mcfg: model_lib.ModelConfig, tcfg: TrainConfig,
     }
     if tcfg.use_graft:
         state["graft"] = graft_lib.init_state(tcfg.graft, batch_size)
+        state["sampler_carry"] = init_sampler_carry(mcfg, tcfg, params,
+                                                    batch_size)
     if tcfg.sentinel:
         state["health"] = init_health()
     return state
@@ -114,6 +131,9 @@ def train_state_logical(mcfg, tcfg: TrainConfig, abstract_state):
     }
     if "graft" in abstract_state:
         out["graft"] = _replicated_logical(abstract_state["graft"])
+    if "sampler_carry" in abstract_state:
+        out["sampler_carry"] = _replicated_logical(
+            abstract_state["sampler_carry"])
     if "health" in abstract_state:
         out["health"] = _replicated_logical(abstract_state["health"])
     return out
@@ -176,8 +196,10 @@ def selection_inputs(mcfg, tcfg: TrainConfig, params, batch
 
 
 def make_selection_refresh(mcfg, tcfg: TrainConfig):
-    """``(params, batch, step) → SelectionState``: the selection forward
-    alone — features + grad embeddings + the registry sampler's decision.
+    """``(params, batch, carry, step) → (SelectionState, carry')``: the
+    selection forward alone — features + grad embeddings + the registry
+    sampler's decision, with the sampler's cross-step carry threaded
+    through (Sampler-v2; ``{}`` in/out for stateless strategies).
 
     ``graft_train_step`` inlines this under its refresh ``lax.cond``; the
     ``OverlappedSelector`` (``repro.selection.overlap``) jits it as its OWN
@@ -187,11 +209,11 @@ def make_selection_refresh(mcfg, tcfg: TrainConfig):
     smp = sampler_registry.get_sampler(tcfg.sampler)
     gcfg = tcfg.graft
 
-    def refresh(params, batch, step):
+    def refresh(params, batch, carry, step):
         V, G, g_bar, scores = selection_inputs(mcfg, tcfg, params, batch)
         key = selection_base.default_select_key(step)
         return smp.select(gcfg, selection_base.SelectionInputs(
-            V, G, g_bar, scores, key), step)
+            V, G, g_bar, scores, key), carry, step)
 
     return refresh
 
@@ -203,6 +225,20 @@ def _take_batch(batch, pivots: jax.Array, k_global: int):
             return constrain(sub, ("act_batch",) + (None,) * (sub.ndim - 1))
         return x
     return jax.tree_util.tree_map(take, batch)
+
+
+def _state_carry(tcfg: TrainConfig, state):
+    """The sampler carry held in the train state; ``{}`` for legacy state
+    dicts built before the v2 protocol (their structure is preserved — the
+    step functions only store a carry back when the key exists)."""
+    if "sampler_carry" in state:
+        return state["sampler_carry"]
+    smp = sampler_registry.get_sampler(tcfg.sampler)
+    if smp.stateful:
+        raise ValueError(
+            f"sampler '{smp.name}' is stateful but the train state has no "
+            f"'sampler_carry' — build the state with init_train_state")
+    return selection_base.EMPTY_CARRY
 
 
 # ---------------------------------------------------------------------------
@@ -241,17 +277,21 @@ def graft_train_step(mcfg, tcfg: TrainConfig, state, batch):
     refresh = make_selection_refresh(mcfg, tcfg)
     opt = make_optimizer(tcfg.optimizer)
     k_global = jax.tree_util.tree_leaves(batch)[0].shape[0]
+    carry0 = _state_carry(tcfg, state)
 
     def do_select(_):
-        return refresh(state["params"], batch, state["step"])
+        return refresh(state["params"], batch, carry0, state["step"])
 
     if gcfg.refresh_every == 1:
-        graft_state = do_select(None)
+        graft_state, carry = do_select(None)
     else:
-        graft_state = jax.lax.cond(
+        # both branches return (SelectionState, carry): the non-refresh
+        # branch keeps the carry untouched, so the reservoir only advances
+        # on refresh steps (what makes rollback/resume bit-exact)
+        graft_state, carry = jax.lax.cond(
             state["step"] % gcfg.refresh_every == 0,
             do_select,
-            lambda _: state["graft"]._replace(step=state["step"]),
+            lambda _: (state["graft"]._replace(step=state["step"]), carry0),
             None)
 
     sub_batch = _take_batch(batch, graft_state.pivots, k_global)
@@ -266,6 +306,8 @@ def graft_train_step(mcfg, tcfg: TrainConfig, state, batch):
         state["params"], grads, state["opt"], state["step"])
     new_state = dict(state, params=params, opt=opt_state,
                      step=state["step"] + 1, graft=graft_state)
+    if "sampler_carry" in state:
+        new_state["sampler_carry"] = carry
     metrics = dict(metrics, loss=loss_val, rank=graft_state.rank,
                    proj_error=graft_state.last_error,
                    alignment=graft_state.alignment)
@@ -299,8 +341,11 @@ def selection_step(mcfg, tcfg: TrainConfig, state, batch):
     """Selection only (features + grad embeddings + MaxVol + rank sweep) —
     isolates the refresh cost for the amortization analysis (§Perf)."""
     refresh = make_selection_refresh(mcfg, tcfg)
-    graft_state = refresh(state["params"], batch, state["step"])
+    graft_state, carry = refresh(state["params"], batch,
+                                 _state_carry(tcfg, state), state["step"])
     new_state = dict(state, graft=graft_state)
+    if "sampler_carry" in state:
+        new_state["sampler_carry"] = carry
     return new_state, {"rank": graft_state.rank,
                        "proj_error": graft_state.last_error}
 

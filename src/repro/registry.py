@@ -1,0 +1,65 @@
+"""One generic name → object registry behind every pluggable subsystem.
+
+The repo grew three near-identical registries (samplers in
+``selection/registry.py``, feature extractors / grad sources in
+``selection/sources.py``, task/data sources in ``data/sources.py``) with
+drifting method names and error texts. They are now all instances of
+:class:`Registry`, which pins the shared contract:
+
+  * ``register(name, obj, *, overwrite=False)`` — duplicate names raise
+    ``ValueError("<kind> '<name>' already registered")`` unless
+    ``overwrite=True`` is passed explicitly;
+  * ``get(name)`` — unknown names raise
+    ``KeyError("unknown <kind> '<name>'; available: (...)")`` so the caller
+    sees every valid choice in the error itself;
+  * ``available()`` — sorted name tuple, the one enumeration CI matrices
+    and conformance tests iterate.
+
+``Registry`` subclasses ``dict`` on purpose: the existing registries were
+bare module-level dicts that tests (and some internal call sites) poke
+directly — ``_REGISTRY.pop(name, None)`` cleanup, ``.values()`` scans —
+and all of that keeps working on the same object.
+
+Registries whose defaults live in a sibling module (samplers) pass
+``ensure_defaults``: a zero-arg import hook run before ``get``/
+``available`` whenever the registry is empty, so bare imports of the
+registry module still resolve the built-ins lazily.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Tuple, TypeVar
+
+T = TypeVar("T")
+
+
+class Registry(dict):
+    """Name → object mapping with uniform register/get/available semantics."""
+
+    def __init__(self, kind: str,
+                 ensure_defaults: Optional[Callable[[], None]] = None):
+        super().__init__()
+        self.kind = kind
+        self._ensure = ensure_defaults
+
+    def _ensure_defaults(self) -> None:
+        if self._ensure is not None and not self:
+            self._ensure()
+
+    def register(self, name: str, obj: T, *, overwrite: bool = False) -> T:
+        if not overwrite and name in self:
+            raise ValueError(f"{self.kind} '{name}' already registered")
+        self[name] = obj
+        return obj
+
+    def get(self, name: str) -> T:  # type: ignore[override]
+        # NOT dict.get: unknown names raise with the available choices
+        # (the registry contract) instead of silently returning None.
+        self._ensure_defaults()
+        if name not in self:
+            raise KeyError(f"unknown {self.kind} '{name}'; "
+                           f"available: {self.available()}")
+        return self[name]
+
+    def available(self) -> Tuple[str, ...]:
+        self._ensure_defaults()
+        return tuple(sorted(self))

@@ -86,6 +86,30 @@ def scenario_nan_rollback(td: str) -> Dict:
     return {"rolled_back_to": to_step, "final_loss": report["final_loss"]}
 
 
+def scenario_streaming_nan_rollback(td: str) -> Dict:
+    """nan_rollback with a LIVE sketch reservoir: the streaming sampler's
+    carry (frequent-directions sketch + stream-mean EMA) rides the train
+    state, so the rollback must restore it and the replay must advance it
+    identically — the bit-identical final loss proves the reservoir is
+    checkpointed, rolled back, and resumed exactly."""
+    cfg = _cell(td, "train.sampler=streaming_graft",
+                fault_plan=[{"kind": "nan_batch", "step": 12}])
+    report = Trainer(cfg).fit()
+    rollbacks = report.get("resilience", {}).get("rollbacks", [])
+    _require(len(rollbacks) == 1, f"expected one rollback, got {rollbacks}")
+    to_step = rollbacks[0]["to_step"]
+
+    twin_dir = os.path.join(td, "twin")
+    os.makedirs(twin_dir)
+    shutil.copytree(os.path.join(td, "ck", f"step_{to_step:08d}"),
+                    os.path.join(twin_dir, f"step_{to_step:08d}"))
+    twin = Trainer.from_checkpoint(twin_dir).fit()
+    _require(twin["final_loss"] == report["final_loss"],
+             f"final loss diverged with live reservoir: injected "
+             f"{report['final_loss']} vs clean resume {twin['final_loss']}")
+    return {"rolled_back_to": to_step, "final_loss": report["final_loss"]}
+
+
 def scenario_corrupt_leaf(td: str) -> Dict:
     cfg = _cell(td)
     Trainer(cfg).fit()
@@ -145,6 +169,7 @@ def scenario_kill_mid_save(td: str) -> Dict:
 
 SCENARIOS: List[Callable[[str], Dict]] = [
     scenario_nan_rollback,
+    scenario_streaming_nan_rollback,
     scenario_corrupt_leaf,
     scenario_sigterm,
     scenario_kill_mid_save,

@@ -6,10 +6,13 @@ Quick tour::
     from repro.selection.base import GraftConfig
 
     cfg = GraftConfig(rset=(4, 8, 16))
-    state = engine.select_batch(cfg, "graft", V, G, g_bar)       # one batch
-    states = engine.select_multi_batch(cfg, "graft", Vs, Gs, gbs)  # vmapped
-    state = engine.select_sharded(cfg, mesh, V, G)               # shard_map DP
+    state, carry = engine.select_batch(cfg, "graft", V, G, g_bar)  # one batch
+    states, cs = engine.select_multi_batch(cfg, "graft", Vs, Gs, gbs)  # vmapped
+    state, carry = engine.select_sharded(cfg, mesh, V, G)          # shard_map DP
 
+Every engine path speaks the Sampler-v2 protocol — ``(SelectionState,
+carry)`` pairs, where the carry is the sampler's cross-step state (``{}``
+for stateless strategies, the sketch reservoir for ``streaming_graft``).
 ``registry.available()`` lists samplers; add your own with
 ``registry.register(Sampler(name, fn))``.
 
@@ -20,9 +23,10 @@ The selection *inputs* are pluggable too: ``sources.resolve_features`` /
 ``GraftConfig.grad_mode``.
 """
 from repro.selection import samplers as _samplers  # noqa: F401 (registers defaults)
-from repro.selection import sources
-from repro.selection.base import (GraftConfig, Sampler, SamplerConfig,
-                                  SelectionInputs, SelectionState, init_state)
+from repro.selection import sources, streaming
+from repro.selection.base import (Carry, CarrySpec, GraftConfig, Sampler,
+                                  SamplerConfig, SelectionInputs,
+                                  SelectionState, init_state)
 from repro.selection.engine import (make_sharded_selector, select_batch,
                                     select_multi_batch, select_sharded)
 from repro.selection.graft import (GraftState, graft_select,
@@ -38,7 +42,8 @@ from repro.selection.sources import (FeatureExtractor, GradSource,
 
 __all__ = [
     "GraftConfig", "SamplerConfig", "Sampler", "SelectionInputs",
-    "SelectionState", "GraftState", "init_state",
+    "SelectionState", "GraftState", "Carry", "CarrySpec", "init_state",
+    "streaming",
     "graft_select", "graft_select_batched", "maybe_refresh",
     "select_from_batch",
     "select_batch", "select_multi_batch", "select_sharded",

@@ -1,16 +1,28 @@
 """Sampler protocol + shared state for the selection engine.
 
-Every subset sampler (GRAFT, random, loss-topk, the coreset baselines)
-implements one signature — ``fn(cfg, inputs, step) -> SelectionState`` — so
-the train step, the vmapped multi-batch path and the shard_map data-parallel
-path in ``engine.py`` are sampler-agnostic. The config object is the paper's
-``GraftConfig``: non-GRAFT samplers read only ``r_max`` (subset size budget)
-and ``use_pallas`` from it, so one config drives every strategy in a sweep.
+Every subset sampler (GRAFT, random, loss-topk, the coreset baselines, the
+streaming sketch sampler) implements one v2 signature —
+
+    ``select(cfg, inputs, carry, step) -> (SelectionState, Carry)``
+
+so the train step, the vmapped multi-batch path and the shard_map
+data-parallel path in ``engine.py`` are sampler-agnostic. The *carry* is
+the sampler's cross-step state: an arbitrary pytree created once by
+``init_carry(cfg, spec)``, threaded through every ``select`` call, stored
+in the train state, and checkpointed with it — it is the ONLY sanctioned
+state channel (samplers must not close over mutable Python state; the
+analysis suite enforces this). Stateless samplers carry the empty pytree
+``{}`` and return it unchanged, so the legacy per-batch strategies are
+bit-identical under v2.
+
+The config object is the paper's ``GraftConfig``: non-GRAFT samplers read
+only ``r_max`` (subset size budget) and ``use_pallas`` from it, so one
+config drives every strategy in a sweep.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, NamedTuple, Optional, Tuple
+from typing import Any, Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -32,10 +44,23 @@ class GraftConfig:
                                               # dispatch schedule only — same
                                               # trajectory, excluded from
                                               # config_hash
+    # -- streaming (selection/streaming.py) ----------------------------------
+    # knobs for the cross-batch sketch reservoir; inert (and excluded from
+    # config_hash) unless the streaming_graft sampler is selected
+    streaming: bool = False                    # upgrade 'graft' → 'streaming_graft'
+    sketch_rows: int = 64                      # L — reservoir rows, (L, d) footprint
+    sketch_decay: float = 0.99                 # per-refresh reservoir/EMA decay
+    stream_mix: float = 0.5                    # β cap on the stream-target blend
 
     def __post_init__(self):
         if tuple(sorted(self.rset)) != tuple(self.rset):
             raise ValueError("rset must be ascending")
+        if self.sketch_rows < 1:
+            raise ValueError("sketch_rows must be >= 1")
+        if not 0.0 <= self.sketch_decay <= 1.0:
+            raise ValueError("sketch_decay must be in [0, 1]")
+        if not 0.0 <= self.stream_mix <= 1.0:
+            raise ValueError("stream_mix must be in [0, 1]")
 
     @property
     def r_max(self) -> int:
@@ -109,26 +134,87 @@ def finalize_state(cfg: GraftConfig, pivots: jax.Array, weights: jax.Array,
                           alignment=align, step=jnp.int32(step))
 
 
+class CarrySpec(NamedTuple):
+    """Static shape info a sampler needs to size its carry before the first
+    batch exists (``init_carry`` runs at train-state init, not at trace
+    time). ``batch_size`` is K (rows of ``V``), ``grad_dim`` is d (rows of
+    ``G`` — the gradient-embedding width)."""
+    batch_size: int
+    grad_dim: int
+
+    @classmethod
+    def from_inputs(cls, inputs: "SelectionInputs") -> "CarrySpec":
+        return cls(batch_size=int(inputs.V.shape[0]),
+                   grad_dim=int(inputs.G.shape[0]))
+
+
+# the stateless carry: a leafless pytree, invisible to jit/vmap/checkpoint
+EMPTY_CARRY: dict = {}
+
+# Carry is any pytree; a bare alias keeps signatures readable
+Carry = Any
+
+
 @dataclasses.dataclass(frozen=True)
 class Sampler:
-    """A registered selection strategy.
+    """A registered selection strategy (v2 protocol).
 
-    ``fn(cfg, inputs, step) -> SelectionState`` must be jit/vmap-traceable
-    for a fixed ``cfg``. ``needs_scores``/``needs_key`` document (and let the
-    engine validate) which optional inputs the strategy reads.
+    Stateless strategies provide ``fn(cfg, inputs, step) -> SelectionState``
+    — the pre-v2 signature — and the protocol wraps it: their carry is the
+    empty pytree, returned unchanged, and numerics are bit-identical to the
+    direct ``fn`` call. Stateful strategies (the streaming reservoir)
+    provide ``select_fn(cfg, inputs, carry, step) -> (SelectionState,
+    carry')`` plus ``init_carry_fn(cfg, spec) -> carry``. Either callable
+    must be jit/vmap-traceable for a fixed ``cfg``.
+
+    ``needs_scores``/``needs_key`` document which optional inputs the
+    strategy reads; both are validated symmetrically by :meth:`select` (and
+    pre-validated by the engine paths) with the same actionable error.
     """
     name: str
-    fn: Callable[[GraftConfig, SelectionInputs, jax.Array], SelectionState]
+    fn: Optional[Callable[[GraftConfig, SelectionInputs, jax.Array],
+                          SelectionState]] = None
     needs_scores: bool = False
     needs_key: bool = False
+    select_fn: Optional[Callable[..., Tuple[SelectionState, Carry]]] = None
+    init_carry_fn: Optional[Callable[[GraftConfig, CarrySpec], Carry]] = None
+
+    def __post_init__(self):
+        if (self.fn is None) == (self.select_fn is None):
+            raise ValueError(
+                f"sampler '{self.name}' must define exactly one of fn "
+                f"(stateless) or select_fn (stateful)")
+
+    @property
+    def stateful(self) -> bool:
+        return self.select_fn is not None
+
+    def _require(self, field: str, value) -> None:
+        if value is None:
+            raise ValueError(
+                f"sampler '{self.name}' requires SelectionInputs.{field} — "
+                f"pass {field}=... (engine paths fill defaults only for "
+                f"samplers that do not declare needs_{field.split('_')[0]})")
+
+    def init_carry(self, cfg: GraftConfig, spec: CarrySpec) -> Carry:
+        """The sampler's initial cross-step state; ``{}`` when stateless."""
+        if self.init_carry_fn is not None:
+            return self.init_carry_fn(cfg, spec)
+        return EMPTY_CARRY
 
     def select(self, cfg: GraftConfig, inputs: SelectionInputs,
-               step=0) -> SelectionState:
+               carry: Carry = None, step=0) -> Tuple[SelectionState, Carry]:
+        """Run one selection: ``(state, carry')``. ``carry=None`` initializes
+        a fresh carry from the input shapes (one-shot call sites)."""
         if self.needs_scores and inputs.scores is None:
-            raise ValueError(f"sampler '{self.name}' requires SelectionInputs.scores")
+            self._require("scores", inputs.scores)
         if self.needs_key and inputs.key is None:
-            raise ValueError(f"sampler '{self.name}' requires SelectionInputs.key")
-        return self.fn(cfg, inputs, jnp.int32(step))
+            self._require("key", inputs.key)
+        if carry is None:
+            carry = self.init_carry(cfg, CarrySpec.from_inputs(inputs))
+        if self.select_fn is not None:
+            return self.select_fn(cfg, inputs, carry, jnp.int32(step))
+        return self.fn(cfg, inputs, jnp.int32(step)), carry
 
     def init_state(self, cfg: GraftConfig, batch_size: int) -> SelectionState:
         return init_state(cfg, batch_size)

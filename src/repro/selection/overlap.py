@@ -110,8 +110,15 @@ class OverlappedSelector:
             # device futures the train dispatch consumes without host sync.
             # PjRt usage events order it before the donated train step, so
             # the donation of state['params'] cannot clobber its inputs.
-            state = dict(state, graft=self._refresh(
-                state["params"], batch, jnp.int32(step)))
+            # The sampler carry rides the same dispatch: refreshed here,
+            # passed through the subset train step untouched (linear
+            # state_t → state_t+1 aliasing, same as params).
+            sel, carry = self._refresh(
+                state["params"], batch, state.get("sampler_carry", {}),
+                jnp.int32(step))
+            state = dict(state, graft=sel)
+            if "sampler_carry" in state:
+                state["sampler_carry"] = carry
         new_state, metrics = self._train(state, batch)
         g = new_state["graft"]
         return new_state, dict(metrics, rank=g.rank, proj_error=g.last_error,

@@ -1,39 +1,39 @@
 """Name → Sampler registry.
 
-Default samplers register themselves when ``repro.selection`` (or
+A thin skin over the generic :class:`repro.registry.Registry` (shared with
+the feature/grad-source and data-source registries): default samplers
+register themselves when ``repro.selection`` (or
 ``repro.selection.samplers``) is imported; external code can add strategies
 with :func:`register` and every train step / engine path picks them up by
 name — no call-site changes.
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple, Union
+from typing import Tuple, Union
 
+from repro.registry import Registry
 from repro.selection.base import Sampler
 
-_REGISTRY: Dict[str, Sampler] = {}
+
+def _load_defaults() -> None:
+    # default samplers live in sibling modules; make bare-registry imports
+    # (and an emptied-then-queried registry) resolve them lazily
+    from repro.selection import samplers as _  # noqa: F401
+    from repro.selection import streaming as _s  # noqa: F401
+
+
+_REGISTRY: Registry = Registry("sampler", ensure_defaults=_load_defaults)
 
 
 def register(sampler: Sampler, *, overwrite: bool = False) -> Sampler:
-    if not overwrite and sampler.name in _REGISTRY:
-        raise ValueError(f"sampler '{sampler.name}' already registered")
-    _REGISTRY[sampler.name] = sampler
-    return sampler
+    return _REGISTRY.register(sampler.name, sampler, overwrite=overwrite)
 
 
 def get_sampler(name_or_sampler: Union[str, Sampler]) -> Sampler:
     if isinstance(name_or_sampler, Sampler):
         return name_or_sampler
-    # default samplers live in a sibling module; make bare-registry imports work
-    if not _REGISTRY:
-        from repro.selection import samplers as _  # noqa: F401
-    if name_or_sampler not in _REGISTRY:
-        raise KeyError(f"unknown sampler '{name_or_sampler}'; "
-                       f"available: {available()}")
-    return _REGISTRY[name_or_sampler]
+    return _REGISTRY.get(name_or_sampler)
 
 
 def available() -> Tuple[str, ...]:
-    if not _REGISTRY:
-        from repro.selection import samplers as _  # noqa: F401
-    return tuple(sorted(_REGISTRY))
+    return _REGISTRY.available()

@@ -98,7 +98,14 @@ GRAFT = register(Sampler("graft", graft_sampler_fn))
 RANDOM = register(Sampler("random", random_fn, needs_key=True))
 LOSS_TOPK = register(Sampler("loss_topk", loss_topk_fn, needs_scores=True))
 FULL = register(Sampler("full", full_fn))
-EL2N = register(Sampler("el2n", el2n_fn))
+# el2n ranks loss-scaled gradient-embedding norms: score-less inputs mean the
+# probe forward that scales G was skipped upstream, so the ranking would be
+# silently wrong — declare the dependency and fail loudly instead
+EL2N = register(Sampler("el2n", el2n_fn, needs_scores=True))
 GRADMATCH = register(Sampler("gradmatch", gradmatch_fn))
 CRAIG = register(Sampler("craig", craig_fn))
 GLISTER = register(Sampler("glister", glister_fn))
+
+# the streaming sketch sampler lives in its own module; importing it here
+# keeps "import repro.selection.samplers" sufficient to populate the registry
+from repro.selection import streaming as _streaming  # noqa: E402,F401

@@ -45,7 +45,7 @@ embeddings need a second encoder's params plumbed in).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, NamedTuple, Tuple, Union
+from typing import Any, Callable, NamedTuple, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -53,6 +53,7 @@ import jax.numpy as jnp
 from repro.core import features as features_lib
 from repro.core.grad_features import (logit_error_embeddings,
                                       per_sample_grads_full)
+from repro.registry import Registry
 
 
 class GradSourceInputs(NamedTuple):
@@ -90,6 +91,15 @@ class GradSource:
     fn: Callable[[GradSourceInputs], jax.Array]
     needs_params: bool = False   # reads inputs.params/mcfg (head weights)
     needs_batch: bool = False    # reads inputs.batch (re-runs the model)
+    embed_dim_of: Optional[Callable[[Any, Any], int]] = None
+    # ^ (mcfg, params) → E, the embedding width this source emits. Stateful
+    # samplers size their carry (the sketch reservoir is (L, E)) before any
+    # batch exists; None means "hidden width" (mcfg.d_model).
+
+    def embed_dim(self, mcfg: Any, params: Any) -> int:
+        if self.embed_dim_of is not None:
+            return int(self.embed_dim_of(mcfg, params))
+        return int(mcfg.d_model)
 
     def __call__(self, inputs: GradSourceInputs) -> jax.Array:
         if self.needs_params and inputs.params is None:
@@ -101,50 +111,40 @@ class GradSource:
         return self.fn(inputs)
 
 
-_FEATURES: Dict[str, FeatureExtractor] = {}
-_GRAD_SOURCES: Dict[str, GradSource] = {}
+# generic registries (repro.registry) — shared register/get/available
+# semantics with the sampler and data-source registries
+_FEATURES: Registry = Registry("feature extractor")
+_GRAD_SOURCES: Registry = Registry("grad source")
 
 
 def register_features(extractor: FeatureExtractor, *,
                       overwrite: bool = False) -> FeatureExtractor:
-    if not overwrite and extractor.name in _FEATURES:
-        raise ValueError(f"feature extractor '{extractor.name}' already registered")
-    _FEATURES[extractor.name] = extractor
-    return extractor
+    return _FEATURES.register(extractor.name, extractor, overwrite=overwrite)
 
 
 def register_grad_source(source: GradSource, *,
                          overwrite: bool = False) -> GradSource:
-    if not overwrite and source.name in _GRAD_SOURCES:
-        raise ValueError(f"grad source '{source.name}' already registered")
-    _GRAD_SOURCES[source.name] = source
-    return source
+    return _GRAD_SOURCES.register(source.name, source, overwrite=overwrite)
 
 
 def resolve_features(name: Union[str, FeatureExtractor]) -> FeatureExtractor:
     if isinstance(name, FeatureExtractor):
         return name
-    if name not in _FEATURES:
-        raise KeyError(f"unknown feature extractor '{name}'; "
-                       f"available: {available_features()}")
-    return _FEATURES[name]
+    return _FEATURES.get(name)
 
 
 def resolve_grad_source(name: Union[str, GradSource]) -> GradSource:
     if isinstance(name, GradSource):
         return name
-    if name not in _GRAD_SOURCES:
-        raise KeyError(f"unknown grad source '{name}'; "
-                       f"available: {available_grad_sources()}")
-    return _GRAD_SOURCES[name]
+    return _GRAD_SOURCES.get(name)
 
 
 def available_features() -> Tuple[str, ...]:
-    return tuple(sorted(_FEATURES))
+    return _FEATURES.available()
 
 
 def available_grad_sources() -> Tuple[str, ...]:
-    return tuple(sorted(_GRAD_SOURCES))
+    return _GRAD_SOURCES.available()
 
 
 # ---------------------------------------------------------------------------
@@ -255,8 +255,15 @@ def full_grad_source(inp: GradSourceInputs) -> jax.Array:
     return G.T                                         # (K, |Θ|) f32
 
 
+def _param_count(mcfg: Any, params: Any) -> int:
+    import math
+    return sum(math.prod(leaf.shape)
+               for leaf in jax.tree_util.tree_leaves(params))
+
+
 PROBE = register_grad_source(GradSource("probe", probe_grad_source))
 LOGIT_EMBED = register_grad_source(
     GradSource("logit_embed", logit_embed_grad_source, needs_params=True))
 FULL = register_grad_source(
-    GradSource("full", full_grad_source, needs_params=True, needs_batch=True))
+    GradSource("full", full_grad_source, needs_params=True, needs_batch=True,
+               embed_dim_of=_param_count))

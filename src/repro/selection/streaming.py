@@ -1,0 +1,175 @@
+"""Streaming cross-batch selection: a SAGE-style gradient-sketch reservoir.
+
+Every per-batch sampler scores within one (micro)batch stack; production
+traffic is an unbounded stream. This module keeps a bounded on-device
+memory of the stream's gradient geometry and biases each refresh toward
+directions the stream has agreed on — selection quality that survives
+distribution drift without ever holding the stream in memory.
+
+The carry (``SketchCarry``, fixed footprint, checkpointed with the train
+state) holds three pieces:
+
+  * ``sketch`` — an (L, d) **frequent-directions** sketch of every gradient
+    embedding matrix ``G`` the refreshes have seen (Liberty 2013): each
+    update appends the new rows, takes the top-L singular directions of the
+    combined matrix and shrinks their energy by the (L+1)-th eigenvalue, so
+    ``‖AᵀA − BᵀB‖₂ ≤ ‖A‖_F²/L`` holds for the decayed stream. The sketch is
+    the stream's dominant gradient *subspace* in O(L·d) memory.
+  * ``g_ema`` — the decayed stream mean gradient (bias-corrected at use).
+  * ``count`` / ``agreement`` — refresh count and the last batch↔stream
+    agreement, both float so the sharded path can average carries.
+
+Selection (``streaming_graft``) is **agreement-driven** in the SAGE sense:
+the batch mean ``ḡ`` is compared against its projection onto the sketch
+subspace; the cosine of that projection is the *agreement* ``a ∈ [0, 1]``.
+The refresh then runs the UNMODIFIED fused Fast MaxVol + MGS sweep
+(``graft.pivot_and_sweep`` — still ONE ``pallas_call``, contract JX003)
+against the reservoir-augmented target
+
+    ``g̃ = (1 − β_eff)·ḡ + β_eff·ĝ_stream,   β_eff = stream_mix · a``
+
+so when the batch agrees with the stream history the rank decision and
+weights anchor on the global gradient, and under drift (or on the very
+first refresh, when the sketch is empty and ``a = 0``) selection falls
+back to pure per-batch GRAFT. MaxVol pivots stay batch-local by
+construction — candidates can only come from the batch — it is the
+projection sweep's target subspace that the reservoir augments.
+
+Memory: the carry is ``L·d + d + 2`` floats — for the default L=64 probe
+path (d = d_model) a few hundred KB, independent of stream length.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import projection as proj_lib
+from repro.selection import graft as graft_lib
+from repro.selection.base import (CarrySpec, GraftConfig, Sampler,
+                                  SelectionInputs, SelectionState)
+from repro.selection.registry import register
+
+_EPS = 1e-12
+
+
+class SketchCarry(NamedTuple):
+    """The streaming sampler's cross-step state (all-float32 so the sharded
+    engine can keep it replicated by averaging)."""
+    sketch: jax.Array      # (L, d) frequent-directions sketch rows
+    g_ema: jax.Array       # (d,) decayed stream mean gradient (uncorrected)
+    count: jax.Array       # () f32 — reservoir updates absorbed so far
+    agreement: jax.Array   # () f32 — last cos(ḡ, P_sketch ḡ) diagnostic
+
+
+def init_sketch_carry(cfg: GraftConfig, spec: CarrySpec) -> SketchCarry:
+    d = int(spec.grad_dim)
+    return SketchCarry(
+        sketch=jnp.zeros((cfg.sketch_rows, d), dtype=jnp.float32),
+        g_ema=jnp.zeros((d,), dtype=jnp.float32),
+        count=jnp.float32(0.0),
+        agreement=jnp.float32(0.0),
+    )
+
+
+def fd_update(cfg: GraftConfig, sketch: jax.Array, G: jax.Array) -> jax.Array:
+    """One frequent-directions round: absorb the rows of ``Gᵀ`` (K, d) into
+    the decayed (L, d) sketch at fixed footprint.
+
+    Works entirely through the small (L+K, L+K) Gram eigendecomposition —
+    never an SVD of a d-wide matrix — so the cost is O((L+K)²·d) matmul
+    FLOPs plus an O((L+K)³) eigh, independent of stream length.
+    """
+    L = cfg.sketch_rows
+    stacked = jnp.concatenate(
+        [cfg.sketch_decay * sketch, G.astype(jnp.float32).T], axis=0)
+    gram = stacked @ stacked.T                          # (L+K, L+K)
+    evals, evecs = jnp.linalg.eigh(gram)                # ascending
+    evals = evals[::-1]
+    evecs = evecs[:, ::-1]
+    # σᵢ·vᵢᵀ rows of the combined matrix, largest direction first
+    rows = evecs[:, :L].T @ stacked                     # (L, d)
+    # FD shrinkage: subtract the (L+1)-th eigenvalue from every kept energy
+    delta = evals[L] if stacked.shape[0] > L else jnp.float32(0.0)
+    shrunk = jnp.maximum(evals[:L] - delta, 0.0)
+    scale = jnp.sqrt(shrunk / jnp.maximum(evals[:L], _EPS))
+    return rows * scale[:, None]
+
+
+def sketch_projection(sketch: jax.Array, g: jax.Array) -> jax.Array:
+    """Project ``g`` onto the span of the sketch rows (rows are orthogonal
+    by FD construction; zero rows contribute nothing)."""
+    norms = jnp.linalg.norm(sketch, axis=1, keepdims=True)  # (L, 1)
+    unit = jnp.where(norms > 1e-8, sketch / (norms + _EPS),
+                     jnp.zeros_like(sketch))
+    return unit.T @ (unit @ g.astype(jnp.float32))
+
+
+def stream_agreement(sketch: jax.Array, g_bar: jax.Array) -> jax.Array:
+    """cos(ḡ, P_sketch ḡ) ∈ [0, 1] — how much of the batch gradient lies in
+    the stream's dominant subspace. 0 for an empty sketch."""
+    proj = sketch_projection(sketch, g_bar)
+    return jnp.clip(proj_lib.cosine_alignment(proj, g_bar), 0.0, 1.0)
+
+
+def streaming_select_fn(cfg: GraftConfig, inputs: SelectionInputs,
+                        carry: SketchCarry, step: jax.Array):
+    """The ``Sampler.select_fn`` body: one agreement-driven refresh.
+
+    Order matters for drift response: the agreement is measured against the
+    sketch *before* this batch is absorbed (history vs now), then the
+    reservoir absorbs the batch so the next refresh sees it.
+    """
+    g_bar = inputs.g_bar.astype(jnp.float32)
+    agreement = stream_agreement(carry.sketch, g_bar)
+
+    # advance the stream statistics
+    decay = jnp.float32(cfg.sketch_decay)
+    count = carry.count + 1.0
+    g_ema = decay * carry.g_ema + (1.0 - decay) * g_bar
+    sketch = fd_update(cfg, carry.sketch, inputs.G)
+
+    # bias-corrected stream mean (Adam-style: the EMA of n terms has total
+    # weight 1 − decay^n); refined toward the sketch's dominant subspace
+    corr = jnp.maximum(1.0 - jnp.power(decay, count), _EPS)
+    g_stream = g_ema / corr
+
+    beta = jnp.float32(cfg.stream_mix) * agreement
+    g_tilde = (1.0 - beta) * g_bar + beta * g_stream
+
+    # the unmodified fused dispatch — ONE pallas_call under use_pallas
+    pivots, errors, G_sel = graft_lib.pivot_and_sweep(
+        cfg, inputs.V, inputs.G, g_tilde)
+
+    # epilogue: GRAFT's rank decision on the blended target, then an
+    # agreement-driven reweighting of the active pivots — selected examples
+    # whose gradient embedding aligns with g̃ are upweighted by a masked
+    # softmax, blended with the uniform weights by the same β. At β = 0
+    # (empty sketch, or full disagreement) this is EXACTLY the per-batch
+    # GRAFT epilogue — refresh #1 stays bit-identical to plain GRAFT.
+    rank, err = proj_lib.select_rank(errors, cfg.rset, cfg.eps)
+    active = (jnp.arange(cfg.r_max) < rank).astype(jnp.float32)
+    uniform = active / jnp.maximum(jnp.sum(active), 1.0)
+    col_norms = jnp.linalg.norm(G_sel, axis=0)              # (R_max,)
+    cos = (G_sel.T @ g_tilde) / jnp.maximum(
+        col_norms * jnp.linalg.norm(g_tilde), _EPS)
+    soft = jax.nn.softmax(jnp.where(active > 0.0, cos, -jnp.inf))
+    weights = (1.0 - beta) * uniform + beta * soft
+    g_sub = G_sel @ weights
+    state = SelectionState(
+        pivots=pivots, weights=weights, rank=rank, last_error=err,
+        alignment=proj_lib.cosine_alignment(g_sub, g_tilde), step=step)
+    return state, SketchCarry(sketch=sketch, g_ema=g_ema, count=count,
+                              agreement=agreement)
+
+
+STREAMING_GRAFT = register(Sampler(
+    "streaming_graft",
+    select_fn=streaming_select_fn,
+    init_carry_fn=init_sketch_carry,
+))
+
+__all__ = ["SketchCarry", "init_sketch_carry", "fd_update",
+           "sketch_projection", "stream_agreement", "streaming_select_fn",
+           "STREAMING_GRAFT"]

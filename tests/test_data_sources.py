@@ -325,11 +325,12 @@ class TestSelectionOnClassificationBatches:
 
         gcfg = GraftConfig(rset=(2, 4), eps=0.25)
         keys = jax.random.split(jax.random.PRNGKey(7), B)
-        multi = engine.select_multi_batch(gcfg, "graft", Vs, Gs, gbs,
-                                          scores=scores, keys=keys)
+        multi, _ = engine.select_multi_batch(gcfg, "graft", Vs, Gs, gbs,
+                                             scores=scores, keys=keys)
         for b in range(B):
-            single = engine.select_batch(gcfg, "graft", Vs[b], Gs[b], gbs[b],
-                                         scores=scores[b], key=keys[b])
+            single, _ = engine.select_batch(gcfg, "graft", Vs[b], Gs[b],
+                                            gbs[b], scores=scores[b],
+                                            key=keys[b])
             np.testing.assert_array_equal(np.asarray(multi.pivots[b]),
                                           np.asarray(single.pivots))
             assert int(multi.rank[b]) == int(single.rank)

@@ -55,7 +55,8 @@ class TestRegistry:
             return init_state(cfg, inputs.V.shape[0])._replace(step=step)
         try:
             register(Sampler("custom_test_only", fn))
-            st = engine.select_batch(CFG, "custom_test_only", *_inputs(np.random.default_rng(0)))
+            st, _ = engine.select_batch(CFG, "custom_test_only",
+                                        *_inputs(np.random.default_rng(0)))
             assert int(st.rank) == CFG.r_max
         finally:
             from repro.selection import registry as reg
@@ -64,12 +65,13 @@ class TestRegistry:
 
 class TestSamplerContracts:
     @pytest.mark.parametrize("name", ["graft", "random", "loss_topk", "full",
-                                      "el2n", "gradmatch", "craig", "glister"])
+                                      "el2n", "gradmatch", "craig", "glister",
+                                      "streaming_graft"])
     def test_state_invariants(self, rng, name):
         K = 32
         V, G, gb = _inputs(rng, K=K)
         scores = jnp.asarray(rng.random(K).astype(np.float32))
-        st = engine.select_batch(CFG, name, V, G, gb, scores=scores)
+        st, _ = engine.select_batch(CFG, name, V, G, gb, scores=scores)
         assert isinstance(st, SelectionState)
         piv = np.asarray(st.pivots)
         w = np.asarray(st.weights)
@@ -81,10 +83,17 @@ class TestSamplerContracts:
         assert 1 <= int(st.rank) <= CFG.r_max
         assert 0.0 <= float(st.last_error) <= 1.0 + 1e-6
 
-    def test_loss_topk_requires_scores(self, rng):
+    @pytest.mark.parametrize("name", ["loss_topk", "el2n"])
+    def test_score_samplers_require_scores(self, rng, name):
+        """Score-consuming samplers fail LOUDLY without scores — via the
+        engine AND via Sampler.select directly — instead of silently
+        selecting on a zeros placeholder."""
         V, G, gb = _inputs(rng)
+        with pytest.raises(ValueError, match=f"sampler '{name}' requires "
+                                             "SelectionInputs.scores"):
+            engine.select_batch(CFG, name, V, G, gb)
         with pytest.raises(ValueError, match="scores"):
-            engine.select_batch(CFG, "loss_topk", V, G, gb)
+            get_sampler(name).select(CFG, SelectionInputs(V, G, gb))
 
     def test_declared_requirements_enforced(self, rng):
         """Every registered sampler's declared optional-input requirements
@@ -102,7 +111,7 @@ class TestSamplerContracts:
                 with pytest.raises(ValueError, match="key"):
                     smp.select(CFG, SelectionInputs(V, G, gb, scores, None))
             # with both supplied, every sampler must select
-            st = smp.select(CFG, SelectionInputs(V, G, gb, scores, key))
+            st, _ = smp.select(CFG, SelectionInputs(V, G, gb, scores, key))
             assert isinstance(st, SelectionState)
 
     def test_random_requires_key_via_select(self, rng):
@@ -115,19 +124,19 @@ class TestSamplerContracts:
         K = 16
         V, G, gb = _inputs(rng, K=K)
         scores = jnp.asarray(np.arange(K, dtype=np.float32))
-        st = engine.select_batch(CFG, "loss_topk", V, G, gb, scores=scores)
+        st, _ = engine.select_batch(CFG, "loss_topk", V, G, gb, scores=scores)
         assert set(np.asarray(st.pivots).tolist()) == set(range(K - CFG.r_max, K))
 
     def test_full_is_identity_prefix(self, rng):
         V, G, gb = _inputs(rng)
-        st = engine.select_batch(CFG, "full", V, G, gb)
+        st, _ = engine.select_batch(CFG, "full", V, G, gb)
         assert np.array_equal(np.asarray(st.pivots), np.arange(CFG.r_max))
 
     def test_random_deterministic_in_key(self, rng):
         V, G, gb = _inputs(rng)
         key = jax.random.PRNGKey(7)
-        a = engine.select_batch(CFG, "random", V, G, gb, key=key)
-        b = engine.select_batch(CFG, "random", V, G, gb, key=key)
+        a, _ = engine.select_batch(CFG, "random", V, G, gb, key=key)
+        b, _ = engine.select_batch(CFG, "random", V, G, gb, key=key)
         assert np.array_equal(np.asarray(a.pivots), np.asarray(b.pivots))
 
     def test_masked_weight_error_matches_active_subspace(self, rng):
@@ -139,7 +148,7 @@ class TestSamplerContracts:
         V = jnp.asarray(rng.normal(size=(K, 16)).astype(np.float32))
         G = jnp.asarray(rng.normal(size=(d, K)).astype(np.float32))
         gb = jnp.mean(G, axis=1)
-        st = engine.select_batch(cfg, "gradmatch", V, G, gb)
+        st, _ = engine.select_batch(cfg, "gradmatch", V, G, gb)
         w = np.asarray(st.weights)
         assert (w == 0).any(), "seed no longer exercises clipped weights"
         act = np.asarray(st.pivots)[w > 0]
@@ -151,7 +160,7 @@ class TestSamplerContracts:
     def test_graft_matches_direct_call(self, rng):
         from repro.selection.graft import graft_select
         V, G, gb = _inputs(rng)
-        via_engine = engine.select_batch(CFG, "graft", V, G, gb)
+        via_engine, _ = engine.select_batch(CFG, "graft", V, G, gb)
         direct = graft_select(CFG, V, G, gb, jnp.int32(0))
         assert np.array_equal(np.asarray(via_engine.pivots), np.asarray(direct.pivots))
         assert int(via_engine.rank) == int(direct.rank)
@@ -166,12 +175,12 @@ class TestVmappedMultiBatch:
         gbs = jnp.mean(Gs, axis=2)
         scores = jnp.asarray(rng.random((B, K)).astype(np.float32))
         keys = jax.random.split(jax.random.PRNGKey(3), B)
-        multi = engine.select_multi_batch(CFG, name, Vs, Gs, gbs,
-                                          scores=scores, keys=keys)
+        multi, _ = engine.select_multi_batch(CFG, name, Vs, Gs, gbs,
+                                             scores=scores, keys=keys)
         assert multi.pivots.shape == (B, CFG.r_max)
         for b in range(B):
-            single = engine.select_batch(CFG, name, Vs[b], Gs[b], gbs[b],
-                                         scores=scores[b], key=keys[b])
+            single, _ = engine.select_batch(CFG, name, Vs[b], Gs[b], gbs[b],
+                                            scores=scores[b], key=keys[b])
             np.testing.assert_array_equal(np.asarray(multi.pivots[b]),
                                           np.asarray(single.pivots))
             np.testing.assert_allclose(np.asarray(multi.weights[b]),
@@ -191,9 +200,9 @@ class TestVmappedMultiBatch:
         Vs = jnp.asarray(rng.normal(size=(B, K, cfg.r_max)).astype(np.float32))
         Gs = jnp.asarray(rng.normal(size=(B, d, K)).astype(np.float32))
         gbs = jnp.mean(Gs, axis=2)
-        multi = engine.select_multi_batch(cfg, "graft", Vs, Gs, gbs)
+        multi, _ = engine.select_multi_batch(cfg, "graft", Vs, Gs, gbs)
         for b in range(B):
-            single = engine.select_batch(CFG, "graft", Vs[b], Gs[b], gbs[b])
+            single, _ = engine.select_batch(CFG, "graft", Vs[b], Gs[b], gbs[b])
             np.testing.assert_array_equal(np.asarray(multi.pivots[b]),
                                           np.asarray(single.pivots))
             assert int(multi.rank[b]) == int(single.rank)
@@ -216,8 +225,8 @@ class TestShardedSelection:
     def test_single_device_mesh_matches_reference(self, rng):
         V, G, gb = _inputs(rng)
         mesh = jax.make_mesh((1, 1), ("data", "model"))
-        sharded = engine.select_sharded(CFG, mesh, V, G)
-        single = engine.select_batch(CFG, "graft", V, G, gb)
+        sharded, _ = engine.select_sharded(CFG, mesh, V, G)
+        single, _ = engine.select_batch(CFG, "graft", V, G, gb)
         np.testing.assert_array_equal(np.asarray(sharded.pivots),
                                       np.asarray(single.pivots))
         assert int(sharded.rank) == int(single.rank)
@@ -261,12 +270,12 @@ class TestShardedSelection:
             cfg = GraftConfig(rset=(2, 4, 8), eps=0.2)
             V1 = jnp.asarray(rng.normal(size=(K, 8)).astype(np.float32))
             G1 = jnp.asarray(rng.normal(size=(d, K)).astype(np.float32))
-            single = engine.select_batch(cfg, "graft", V1, G1, jnp.mean(G1, axis=1))
+            single, _ = engine.select_batch(cfg, "graft", V1, G1, jnp.mean(G1, axis=1))
             mesh = jax.make_mesh((2, 2), ("data", "model"))  # 2-way data sharding
             n_sh = 2
-            sharded = engine.select_sharded(cfg, mesh,
-                                            jnp.tile(V1, (n_sh, 1)),
-                                            jnp.tile(G1, (1, n_sh)))
+            sharded, _ = engine.select_sharded(cfg, mesh,
+                                               jnp.tile(V1, (n_sh, 1)),
+                                               jnp.tile(G1, (1, n_sh)))
             piv = np.asarray(sharded.pivots).reshape(n_sh, cfg.r_max)
             for s in range(n_sh):
                 assert np.array_equal(piv[s] - s * K, np.asarray(single.pivots)), s
@@ -283,6 +292,239 @@ class TestShardedSelection:
                              text=True, env=env, timeout=480)
         assert out.returncode == 0, out.stderr[-3000:]
         assert "SHARDED_OK" in out.stdout
+
+
+class TestSamplerV2Conformance:
+    """Protocol conformance for EVERY registered sampler: init_carry/select
+    round-trip on the single-batch, vmapped multi-batch, and forced-4-device
+    shard_map paths, plus bit-identity of legacy (stateless) samplers with
+    their pre-v2 ``fn``."""
+
+    def _spec_inputs(self, rng, K=24, d=16):
+        V = jnp.asarray(rng.normal(size=(K, CFG.r_max)).astype(np.float32))
+        G = jnp.asarray(rng.normal(size=(d, K)).astype(np.float32))
+        scores = jnp.asarray(rng.random(K).astype(np.float32))
+        key = jax.random.PRNGKey(11)
+        return V, G, jnp.mean(G, axis=1), scores, key
+
+    @pytest.mark.parametrize("name", sorted(available()))
+    def test_select_roundtrips_carry(self, rng, name):
+        from repro.selection import CarrySpec
+        smp = get_sampler(name)
+        V, G, gb, scores, key = self._spec_inputs(rng)
+        spec = CarrySpec(batch_size=int(V.shape[0]), grad_dim=int(G.shape[0]))
+        carry0 = smp.init_carry(CFG, spec)
+        st, carry1 = smp.select(CFG, SelectionInputs(V, G, gb, scores, key),
+                                carry0)
+        assert isinstance(st, SelectionState)
+        assert (jax.tree_util.tree_structure(carry1)
+                == jax.tree_util.tree_structure(carry0))
+        for a, b in zip(jax.tree_util.tree_leaves(carry0),
+                        jax.tree_util.tree_leaves(carry1)):
+            assert a.shape == b.shape and a.dtype == b.dtype
+        if not smp.stateful:
+            assert not jax.tree_util.tree_leaves(carry1), (
+                f"stateless sampler '{name}' returned a non-empty carry")
+        # second hop: the returned carry feeds straight back in
+        st2, _ = smp.select(CFG, SelectionInputs(V, G, gb, scores, key),
+                            carry1, step=1)
+        assert isinstance(st2, SelectionState)
+
+    @pytest.mark.parametrize("name", sorted(available()))
+    def test_legacy_samplers_bit_identical_to_fn(self, rng, name):
+        """The v2 protocol is a pure superset: a stateless sampler routed
+        through select/engine must reproduce its pre-v2 ``fn`` output
+        bit-for-bit."""
+        smp = get_sampler(name)
+        if smp.stateful:
+            pytest.skip("stateful sampler has no pre-v2 fn")
+        V, G, gb, scores, key = self._spec_inputs(rng)
+        inputs = SelectionInputs(V, G, gb, scores, key)
+        # eager vs eager: Sampler.select is a zero-cost shim around fn
+        direct = smp.fn(CFG, inputs, jnp.int32(0))
+        via_select, carry = smp.select(CFG, inputs)
+        # jitted vs jitted: the carry-threading engine compiles to the same
+        # program as a bare jit of fn (the {} carry is leafless)
+        direct_jit = jax.jit(smp.fn, static_argnums=0)(CFG, inputs,
+                                                       jnp.int32(0))
+        via_engine, _ = engine.select_batch(CFG, name, V, G, gb,
+                                            scores=scores, key=key)
+        for field in SelectionState._fields:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(direct, field)),
+                np.asarray(getattr(via_select, field)), err_msg=field)
+            np.testing.assert_array_equal(
+                np.asarray(getattr(direct_jit, field)),
+                np.asarray(getattr(via_engine, field)), err_msg=field)
+        assert not jax.tree_util.tree_leaves(carry)
+
+    @pytest.mark.parametrize("name", sorted(available()))
+    def test_vmapped_path_all_samplers(self, rng, name):
+        B, K, d = 3, 24, 16
+        Vs = jnp.asarray(rng.normal(size=(B, K, CFG.r_max)).astype(np.float32))
+        Gs = jnp.asarray(rng.normal(size=(B, d, K)).astype(np.float32))
+        gbs = jnp.mean(Gs, axis=2)
+        scores = jnp.asarray(rng.random((B, K)).astype(np.float32))
+        keys = jax.random.split(jax.random.PRNGKey(5), B)
+        multi, carry = engine.select_multi_batch(CFG, name, Vs, Gs, gbs,
+                                                 scores=scores, keys=keys)
+        assert multi.pivots.shape == (B, CFG.r_max)
+        assert multi.weights.shape == (B, CFG.r_max)
+        for leaf in jax.tree_util.tree_leaves(carry):
+            assert leaf.shape[0] == B, "carry must stack along the batch axis"
+        # round-trip: the stacked carry feeds the next refresh
+        multi2, _ = engine.select_multi_batch(CFG, name, Vs, Gs, gbs,
+                                              scores=scores, keys=keys,
+                                              carry=carry, step=1)
+        assert multi2.pivots.shape == (B, CFG.r_max)
+
+    def test_forced_4device_shardmap_all_samplers(self):
+        """Every registered sampler runs under the sharded selector on a
+        forced-4-device CPU mesh and round-trips its carry (fresh subprocess:
+        device count is fixed at backend init)."""
+        env = dict(os.environ,
+                   XLA_FLAGS="--xla_force_host_platform_device_count=4",
+                   PYTHONPATH=SRC)
+        code = textwrap.dedent("""
+            import numpy as np, jax, jax.numpy as jnp
+            from repro.selection import GraftConfig, available, engine, get_sampler
+            assert len(jax.devices()) == 4
+            rng = np.random.default_rng(0)
+            K, d = 16, 12
+            cfg = GraftConfig(rset=(2, 4), eps=0.2)
+            mesh = jax.make_mesh((2, 2), ("data", "model"))
+            n_sh = 2
+            V = jnp.asarray(rng.normal(size=(n_sh * K, cfg.r_max)).astype(np.float32))
+            G = jnp.asarray(rng.normal(size=(d, n_sh * K)).astype(np.float32))
+            scores = jnp.asarray(rng.random(n_sh * K).astype(np.float32))
+            for name in available():
+                state, carry = engine.select_sharded(cfg, mesh, V, G,
+                                                     sampler=name, scores=scores)
+                piv = np.asarray(state.pivots)
+                assert piv.shape == (n_sh * cfg.r_max,), (name, piv.shape)
+                assert piv.min() >= 0 and piv.max() < n_sh * K, name
+                np.testing.assert_allclose(np.asarray(state.weights).sum(),
+                                           1.0, atol=1e-5, err_msg=name)
+                smp = get_sampler(name)
+                state2, carry2 = engine.select_sharded(cfg, mesh, V, G,
+                                                       sampler=name,
+                                                       scores=scores,
+                                                       carry=carry, step=1)
+                assert (jax.tree_util.tree_structure(carry2)
+                        == jax.tree_util.tree_structure(carry)), name
+                if not smp.stateful:
+                    assert not jax.tree_util.tree_leaves(carry), name
+            print("CONFORMANCE_OK")
+        """)
+        out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                             text=True, env=env, timeout=480)
+        assert out.returncode == 0, out.stderr[-3000:]
+        assert "CONFORMANCE_OK" in out.stdout
+
+
+class TestStreamingGraft:
+    """The frequent-directions sketch reservoir behind ``streaming_graft``."""
+
+    def _inputs(self, rng, K=24, d=16):
+        V = jnp.asarray(rng.normal(size=(K, CFG.r_max)).astype(np.float32))
+        G = jnp.asarray(rng.normal(size=(d, K)).astype(np.float32))
+        return V, G, jnp.mean(G, axis=1)
+
+    def test_carry_shapes_and_footprint(self):
+        from repro.selection import CarrySpec
+        from repro.selection.streaming import SketchCarry, init_sketch_carry
+        cfg = dataclasses.replace(CFG, sketch_rows=8)
+        carry = init_sketch_carry(cfg, CarrySpec(batch_size=24, grad_dim=16))
+        assert isinstance(carry, SketchCarry)
+        assert carry.sketch.shape == (8, 16)      # fixed (L, d), K-independent
+        assert carry.g_ema.shape == (16,)
+        assert carry.count.shape == () and carry.agreement.shape == ()
+        assert all(leaf.dtype == jnp.float32 for leaf in carry)
+
+    def test_first_refresh_matches_per_batch_graft(self, rng):
+        """Empty reservoir ⇒ agreement 0 ⇒ the blended target is exactly the
+        per-batch mean gradient: refresh #1 is bit-identical to plain
+        GRAFT."""
+        V, G, gb = self._inputs(rng)
+        stream, carry = engine.select_batch(CFG, "streaming_graft", V, G, gb)
+        plain, _ = engine.select_batch(CFG, "graft", V, G, gb)
+        for field in ("pivots", "weights", "rank", "last_error"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(stream, field)),
+                np.asarray(getattr(plain, field)), err_msg=field)
+        assert float(carry.count) == 1.0
+
+    def test_reservoir_evolves_and_modulates_selection(self, rng):
+        """Feeding the same batch twice drives agreement → 1 (the sketch
+        spans the batch gradients); a live reservoir may change the blended
+        target while the selection stays well-formed."""
+        V, G, gb = self._inputs(rng)
+        smp = get_sampler("streaming_graft")
+        _, c1 = engine.select_batch(CFG, "streaming_graft", V, G, gb)
+        st2, c2 = engine.select_batch(CFG, "streaming_graft", V, G, gb,
+                                      carry=c1, step=1)
+        assert float(c2.count) == 2.0
+        assert float(c2.agreement) > 0.9, (
+            "repeated batch must be captured by the sketch")
+        assert 0.0 <= float(c2.agreement) <= 1.0
+        assert smp.stateful
+        w = np.asarray(st2.weights)
+        np.testing.assert_allclose(w.sum(), 1.0, atol=1e-5)
+
+    def test_sketch_rows_bound_holds_under_many_updates(self, rng):
+        """The reservoir footprint is CONSTANT: 20 refreshes over random
+        batches never grow the carry beyond (sketch_rows, d)."""
+        cfg = dataclasses.replace(CFG, sketch_rows=4)
+        V, G, gb = self._inputs(rng)
+        carry = None
+        for step in range(20):
+            G = jnp.asarray(rng.normal(size=G.shape).astype(np.float32))
+            _, carry = engine.select_batch(cfg, "streaming_graft", V, G,
+                                           jnp.mean(G, axis=1),
+                                           carry=carry, step=step)
+        assert carry.sketch.shape == (4, 16)
+        assert float(carry.count) == 20.0
+        assert bool(jnp.all(jnp.isfinite(carry.sketch)))
+
+    def test_carry_checkpoint_roundtrip_bit_exact(self, rng, tmp_path):
+        """The reservoir survives a save/restore cycle bit-exactly — the
+        invariant the chaos ``streaming_nan_rollback`` scenario leans on."""
+        from repro.checkpoint import CheckpointManager
+        V, G, gb = self._inputs(rng)
+        _, c1 = engine.select_batch(CFG, "streaming_graft", V, G, gb)
+        _, c2 = engine.select_batch(CFG, "streaming_graft", V, G, gb,
+                                    carry=c1, step=1)
+        state = {"step": jnp.int32(2), "sampler_carry": c2}
+        mgr = CheckpointManager(str(tmp_path))
+        mgr.save(2, state)
+        mgr.wait()
+        restored = mgr.restore(2, state)
+        for a, b in zip(jax.tree_util.tree_leaves(c2),
+                        jax.tree_util.tree_leaves(restored["sampler_carry"])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_streaming_via_graft_train_step(self, rng):
+        """End to end: ``--train.sampler=streaming_graft`` threads the carry
+        through the jitted train step — it advances ONLY on refresh steps."""
+        from repro import configs
+        from repro.launch import steps as steps_lib
+        from repro.launch.specs import default_train_config
+        mcfg = configs.get_smoke_config("minicpm-2b")
+        tcfg = default_train_config("minicpm-2b", batch=8)
+        tcfg = dataclasses.replace(
+            tcfg, sampler="streaming_graft",
+            graft=dataclasses.replace(tcfg.graft, refresh_every=2))
+        toks = jnp.asarray(rng.integers(0, mcfg.vocab_size, (8, 16)),
+                           dtype=jnp.int32)
+        batch = {"tokens": toks, "labels": toks}
+        state = steps_lib.init_train_state(mcfg, tcfg, jax.random.PRNGKey(2),
+                                           batch_size=8)
+        assert float(state["sampler_carry"].count) == 0.0
+        state, metrics = steps_lib.graft_train_step(mcfg, tcfg, state, batch)
+        assert np.isfinite(metrics["loss"])
+        assert float(state["sampler_carry"].count) == 1.0   # step 0 refreshes
+        state, _ = steps_lib.graft_train_step(mcfg, tcfg, state, batch)
+        assert float(state["sampler_carry"].count) == 1.0   # step 1 does not
 
 
 class TestCompatShim:
