@@ -14,6 +14,11 @@ bug (the same call is fine elsewhere):
 * **LN003** — ``pallas_call`` outside ``kernels/``: kernel launches live
   behind the kernels API (budget checks, interpret-mode routing, VJP
   definitions); a stray direct launch bypasses all three.
+* **LN004** — ``jax.distributed.*`` / mesh construction (``jax.make_mesh``
+  or a ``Mesh(...)`` ctor) / ``jax.process_index``/``jax.process_count``
+  outside ``backend/`` + ``launch/mesh.py``: device/process topology is the
+  execution backend's monopoly — a stray mesh or process query hardwires
+  single-process assumptions back into code the backend refactor freed.
 
 Whitelisting is inline and local: put ``lint: allow`` in a comment on the
 flagged line (or the line above). The sanctioned drain points in
@@ -50,6 +55,11 @@ _SYNC_CALLS = {"float", "np.asarray", "numpy.asarray", "np.array",
 _SYNC_TAILS = {"device_get", "block_until_ready"}
 _WALL_CLOCK = {"time.time", "time.perf_counter", "time.monotonic",
                "perf_counter"}
+
+# topology is the backend's monopoly (LN004)
+_TOPOLOGY_SCOPES = ("backend/", "launch/mesh.py")
+_TOPOLOGY_CALLS = {"jax.make_mesh", "jax.process_index", "jax.process_count"}
+_MESH_CTORS = {"Mesh", "jax.sharding.Mesh", "sharding.Mesh"}
 
 
 def _dotted(node: ast.AST) -> str:
@@ -98,6 +108,16 @@ def _call_findings(relpath: str, name: str, lineno: int) -> List[Finding]:
             message="direct pallas_call outside kernels/",
             fix_hint="wrap the launch in a kernels/ entry point (budget "
                      "check + interpret routing + custom_vjp live there)"))
+    if not _in_scope(relpath, _TOPOLOGY_SCOPES) and (
+            name in _TOPOLOGY_CALLS or name in _MESH_CTORS
+            or name.startswith("jax.distributed.")):
+        out.append(Finding(
+            rule="LN004", location=loc,
+            message=f"topology call '{name}(...)' outside the execution "
+                    "backend",
+            fix_hint="route through repro.backend (Backend.mesh()/"
+                     "process_index/setup()) or launch/mesh.py — or mark "
+                     "'# lint: allow <why>' for a deliberate exception"))
     return out
 
 

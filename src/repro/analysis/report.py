@@ -37,6 +37,9 @@ RULES: Dict[str, tuple] = {
                        "dispatch/device clock is required"),
     "LN003": ("error", "pallas_call outside kernels/ (kernel launches must "
                        "live behind the kernels API)"),
+    "LN004": ("error", "jax.distributed/mesh construction/process queries "
+                       "outside repro/backend/ + launch/mesh.py (topology "
+                       "is the execution backend's monopoly)"),
     "SP001": ("error", "registered sampler closes over mutable Python state "
                        "(cross-step state must flow through the Sampler-v2 "
                        "carry, or rollback/resume silently desyncs)"),

@@ -29,8 +29,6 @@ from __future__ import annotations
 import math
 from typing import Any, Callable, Dict, Optional
 
-import jax
-
 from repro.analysis.sync_guard import sync_allowed
 from repro.checkpoint import CheckpointManager, EmergencySaver
 from repro.distributed.straggler import StragglerMonitor
@@ -159,7 +157,7 @@ class MetricsCallback(Callback):
     def on_train_start(self, trainer) -> None:
         tr = trainer.config.train
         self.logger = MetricsLogger(
-            self.path, num_chips=len(jax.devices()),
+            self.path, num_chips=trainer.backend.device_count(),
             flops_per_step=train_step_flops(
                 trainer.num_params, tr.batch * tr.seq,
                 remat=trainer.mcfg.remat != "none",
@@ -203,6 +201,11 @@ class StragglerCallback(Callback):
     def __init__(self):
         self.monitor = StragglerMonitor()
         self._source = "dispatch"
+
+    def on_train_start(self, trainer) -> None:
+        # per-process attribution: the fleet view (merge_summaries) names
+        # the worst host, so each monitor's summary carries its rank
+        self.monitor.process_index = trainer.backend.process_index
 
     def on_step_end(self, trainer, step, metrics) -> None:
         if trainer.device_clock is not None:
@@ -278,7 +281,7 @@ class CheckpointCallback(Callback):
             # healthy — a bit-flipped or mid-crash dir is quarantined to
             # corrupt.<step> and the walk falls back to the previous one
             _, tree, manifest = self.manager.restore_latest_good(
-                trainer.state)
+                trainer.state, backend=trainer.backend)
         except FileNotFoundError:
             return                            # fresh run — nothing on disk
         trainer.state = tree
@@ -304,8 +307,9 @@ class CheckpointCallback(Callback):
             # live state is poisoned — refusing to save means keep-last-N
             # can never rotate entirely onto bad states while the trainer
             # rolls back (and GC won't run either, since it runs in save)
-            print(f"[ckpt] sentinel tripped — refusing to save step "
-                  f"{step + 1}", flush=True)
+            if trainer.backend.is_primary:
+                print(f"[ckpt] sentinel tripped — refusing to save step "
+                      f"{step + 1}", flush=True)
             return
         with sync_allowed("checkpoint"):
             # a checkpoint boundary is a legitimate sync point: the
@@ -313,10 +317,19 @@ class CheckpointCallback(Callback):
             vals = materialize_metrics(metrics)
             healthy = (vals.get("healthy", 1.0) >= 0.5
                        and math.isfinite(vals.get("loss", 0.0)))
+            # the state gather is a COLLECTIVE on multi-process backends
+            # (sharded leaves allgather across ranks) — every process must
+            # participate or the primary deadlocks waiting for peers that
+            # already moved on. One writer per run: every process gathers
+            # (and RESTOREs in on_train_start), only process 0 writes.
+            host_state = trainer.backend.to_host(trainer.state)
+            if not trainer.backend.is_primary:
+                return
             path = self.manager.save(
-                step + 1, trainer.state,
+                step + 1, host_state,
+                topology=trainer.backend.topology(),
                 extra={"train_step": step + 1,
-                       "data": trainer.data.state_dict(),
+                       "data": trainer.data_state(),
                        "metrics": sanitize_row(vals),
                        "health": {"healthy": bool(healthy),
                                   "bad_streak":

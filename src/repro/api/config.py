@@ -1,7 +1,7 @@
 """Declarative experiment configuration — the single source of truth for a
 training run.
 
-``ExperimentConfig`` owns five subsections:
+``ExperimentConfig`` owns six subsections:
 
   * ``model``     — which architecture (registry id), smoke vs full, field
                     overrides (``repro.api.ModelConfig``)
@@ -17,6 +17,15 @@ training run.
                     workload (per-source fields then override on top)
   * ``optimizer`` — ``repro.optim.OptimizerConfig``; ``total_steps``/
                     ``warmup_steps`` of 0 mean "derive from train.steps"
+  * ``backend``   — a TAGGED section like ``data``: any execution backend
+                    registered in ``repro.backend`` (serialized with its
+                    ``kind`` name). ``None`` means single-process local
+                    execution; ``--backend.kind=multiprocess`` swaps it.
+                    The section is HASH-NEUTRAL: where a run executes never
+                    changes which experiment it is, so local and
+                    multi-process runs of one config share a ``config_hash``
+                    (which is what lets a checkpoint resume elastically on
+                    a different topology)
 
 Round-trips losslessly through JSON (``to_json``/``from_json``), accepts
 flat dotted CLI overrides (``apply_overrides(["train.steps=5",
@@ -33,6 +42,7 @@ import hashlib
 import json
 from typing import Any, Dict, Iterable, Optional, Tuple
 
+from repro import backend as backend_lib
 from repro.data import DataConfig
 from repro.data import sources as data_sources
 from repro.optim import OptimizerConfig
@@ -128,8 +138,9 @@ _SECTION_TYPES = {
     "graft": GraftConfig,
     "data": DataConfig,      # the DEFAULT source; actual class is registry-tagged
     "optimizer": OptimizerConfig,
+    "backend": backend_lib.LocalBackendConfig,  # registry-tagged like data
 }
-_OPTIONAL_SECTIONS = ("graft", "data")
+_OPTIONAL_SECTIONS = ("graft", "data", "backend")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -142,6 +153,8 @@ class ExperimentConfig:
     optimizer: OptimizerConfig = OptimizerConfig(
         name="adamw", learning_rate=3e-4, schedule="cosine",
         total_steps=0, warmup_steps=0)
+    backend: Optional[Any] = None       # any registered backend config
+                                        # (None = single-process local)
 
     # ------------------------------------------------------------------
     # derivation
@@ -175,7 +188,7 @@ class ExperimentConfig:
     # ------------------------------------------------------------------
     # builders (the Trainer's inputs)
     # ------------------------------------------------------------------
-    def build(self):
+    def build(self, backend: Optional[Any] = None):
         """→ (model config, step-level TrainConfig, data pipeline).
 
         Everything data-shaped resolves through the task/data-source
@@ -184,7 +197,12 @@ class ExperimentConfig:
         explicit ``data`` section agrees with model/train — a mismatched
         vocab silently NaNs the loss (out-of-range token ids clamp in
         gather), and a mismatched batch/embed-dim fails with an opaque jit
-        shape error; both deserve a loud message instead."""
+        shape error; both deserve a loud message instead.
+
+        ``backend`` (a live ``repro.backend.Backend``) shards the data
+        pipeline to this process's slice of every global batch. The shard
+        is applied at build time only — the config section itself stays
+        rank-agnostic so every process hashes/serializes identically."""
         from repro.launch import steps as steps_lib
         cfg = self.finalized()
         tr, d = cfg.train, cfg.data
@@ -208,6 +226,8 @@ class ExperimentConfig:
             probe_positions=tr.probe_positions,
             microbatches=tr.microbatches,
             sentinel=tr.sentinel, spike_z=tr.spike_z)
+        if backend is not None:
+            d = data_sources.shard_for_backend(d, backend)
         return mcfg, tcfg, entry.build(d)
 
     # ------------------------------------------------------------------
@@ -225,6 +245,10 @@ class ExperimentConfig:
             name = data_sources.source_name_of(self.data)
             if name != "synthetic_lm":
                 out["data"]["source"] = name
+        if out["backend"] is not None:
+            name = backend_lib.backend_name_of(self.backend)
+            if name != "local":         # missing tag reads as local
+                out["backend"]["kind"] = name
         return out
 
     def to_json(self, indent: Optional[int] = None) -> str:
@@ -240,8 +264,12 @@ class ExperimentConfig:
                     kwargs[name] = None
                     continue
                 raise KeyError(f"experiment dict missing section '{name}'")
-            kwargs[name] = (_data_section_from_dict(raw) if name == "data"
-                            else _section_from_dict(typ, raw))
+            if name == "data":
+                kwargs[name] = _data_section_from_dict(raw)
+            elif name == "backend":
+                kwargs[name] = _backend_section_from_dict(raw)
+            else:
+                kwargs[name] = _section_from_dict(typ, raw)
         return cls(**kwargs)
 
     @classmethod
@@ -268,6 +296,10 @@ class ExperimentConfig:
         d = self.finalized().to_dict()
         for f in _NONSEMANTIC_TRAIN_FIELDS:
             d["train"].pop(f, None)
+        # WHERE a run executes never changes WHICH experiment it is: the
+        # whole backend section is hash-neutral (elastic resume depends on
+        # a multi-process resume matching its local-run checkpoint's hash)
+        d.pop("backend", None)
         if d.get("graft"):
             # dispatch-schedule knobs: the overlapped and sequential paths
             # produce the same trajectory (tested), so they share a hash
@@ -320,6 +352,15 @@ def _data_section_from_dict(raw: Dict[str, Any]):
     raw = dict(raw)
     name = raw.pop("source", "synthetic_lm")
     return _section_from_dict(data_sources.get_source(name).config_cls, raw)
+
+
+def _backend_section_from_dict(raw: Dict[str, Any]):
+    """The ``backend`` section is tagged: ``{"kind": <registry name>,
+    **fields}``. A missing tag reads as ``local`` (pre-backend manifests
+    serialized no section at all, which ``from_dict`` maps to ``None``)."""
+    raw = dict(raw)
+    name = raw.pop("kind", "local")
+    return _section_from_dict(backend_lib.get_backend(name).config_cls, raw)
 
 
 def _section_from_dict(typ, raw: Dict[str, Any]):
@@ -381,8 +422,12 @@ def _apply_one(cfg: ExperimentConfig, key: str, raw: str) -> ExperimentConfig:
                 raise ValueError(f"section '{key}' cannot be disabled")
             return dataclasses.replace(cfg, **{key: None})
         if isinstance(value, dict):
-            section = (_data_section_from_dict(value) if key == "data"
-                       else _section_from_dict(_SECTION_TYPES[key], value))
+            if key == "data":
+                section = _data_section_from_dict(value)
+            elif key == "backend":
+                section = _backend_section_from_dict(value)
+            else:
+                section = _section_from_dict(_SECTION_TYPES[key], value)
             return dataclasses.replace(cfg, **{key: section})
         raise ValueError(f"override '{key}={raw}': expected none or a dict")
 
@@ -400,17 +445,35 @@ def _apply_one(cfg: ExperimentConfig, key: str, raw: str) -> ExperimentConfig:
                 data_sources.source_name_of(cfg.data) == value:
             return cfg
         return dataclasses.replace(cfg, data=_derive_data(cfg, value))
+    if (section_name, field) == ("backend", "kind"):
+        # execution swap: default config for the named backend; per-backend
+        # field overrides (coordinator, num_processes…) then apply on top
+        if not isinstance(value, str):
+            raise ValueError(f"backend.kind expects a registry name "
+                             f"(have {backend_lib.available_backends()})")
+        if cfg.backend is not None and \
+                backend_lib.backend_name_of(cfg.backend) == value:
+            return cfg
+        if value == "local" and cfg.backend is None:
+            return cfg                       # None already means local
+        return dataclasses.replace(
+            cfg, backend=backend_lib.get_backend(value).config_cls())
     section = getattr(cfg, section_name)
     if section is None:                      # re-enable optional section
         if section_name == "graft":
             section = ExperimentConfig().graft
+        elif section_name == "backend":
+            # backend fields live on per-kind config classes; local (the
+            # None default) has none, so a field override needs the kind
+            # set first: --backend.kind=multiprocess --backend.field=...
+            section = backend_lib.LocalBackendConfig()
         else:
             # data: derive from model/train so vocab/batch/seq agree —
             # raw DataConfig() defaults would silently mismatch the model
             section = cfg.finalized().data
-    # the data section's concrete class is registry-tagged, not the static
-    # table entry — fields resolve against the live section
-    typ = type(section) if section_name == "data" \
+    # data/backend sections' concrete classes are registry-tagged, not the
+    # static table entry — fields resolve against the live section
+    typ = type(section) if section_name in ("data", "backend") \
         else _SECTION_TYPES[section_name]
     names = {f.name for f in dataclasses.fields(typ)}
     if field not in names:

@@ -33,15 +33,15 @@ import time
 from typing import Any, Dict, Iterable, List, Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
+from repro import backend as backend_lib
 from repro.analysis.sync_guard import sync_allowed
 from repro.api import callbacks as cb_lib
 from repro.api.config import ExperimentConfig
 from repro.distributed import sharding as sh
+from repro.distributed.pipeline import BatchStager
 from repro.launch import steps as steps_lib
-from repro.launch.mesh import make_host_mesh
 from repro.launch.metrics import (DeviceClock, MetricsFuture,
                                   materialize_metrics)
 
@@ -94,8 +94,15 @@ class Trainer:
 
     def __init__(self, config: ExperimentConfig,
                  callbacks: Optional[Iterable[cb_lib.Callback]] = None,
-                 use_default_callbacks: bool = True):
+                 use_default_callbacks: bool = True,
+                 backend: Optional[backend_lib.Backend] = None):
         self.config = config.finalized()
+        # how this run touches devices; ``None`` resolves the config's
+        # tagged ``backend`` section (local when absent). The trainer
+        # itself never constructs meshes or queries process topology —
+        # lint rule LN004 enforces that boundary machine-wide.
+        self.backend = (backend if backend is not None
+                        else backend_lib.resolve(self.config.backend))
         cbs = list(cb_lib.default_callbacks(self.config)
                    if use_default_callbacks else [])
         if callbacks:
@@ -120,6 +127,7 @@ class Trainer:
         self.rollbacks: List[Dict[str, Any]] = []
         self._rollback_reason: Optional[str] = None
         self._chaos = None
+        self._stager: Optional[BatchStager] = None
 
     # ------------------------------------------------------------------
     @classmethod
@@ -132,15 +140,28 @@ class Trainer:
         and ``fault_plan`` (injected faults must not replay into the
         recovered run) are cleared, and ``checkpoint_dir`` is pointed at
         ``directory`` so the run restores and keeps checkpointing in
-        place."""
+        place. The embedded ``backend`` section is cleared too — resume is
+        ELASTIC: the restart picks its own topology (local by default;
+        pass ``backend=`` or re-launch with ``--backend.*`` overrides for
+        multi-process), and ``restore`` reshards the state onto it."""
         from repro.checkpoint import load_experiment
         import dataclasses
         cfg = load_experiment(directory)
-        cfg = dataclasses.replace(cfg, train=dataclasses.replace(
+        cfg = dataclasses.replace(cfg, backend=None,
+                                  train=dataclasses.replace(
             cfg.train, stop_after=None, fault_plan=None,
             checkpoint_dir=directory))
         return cls(cfg, callbacks=callbacks,
                    use_default_callbacks=use_default_callbacks)
+
+    # ------------------------------------------------------------------
+    def data_state(self) -> Dict[str, int]:
+        """The data-pipeline state a checkpoint must record: the position
+        of the last CONSUMED batch. With staging lookahead the live source
+        runs ahead of the loop, so the stager's accounting is the truth."""
+        if self._stager is not None:
+            return self._stager.consumed_state()
+        return self.data.state_dict()
 
     # ------------------------------------------------------------------
     def request_stop(self, reason: str = "requested") -> None:
@@ -189,7 +210,8 @@ class Trainer:
         with sync_allowed("rollback"):
             mgr.wait()
             try:
-                _, tree, manifest = mgr.restore_latest_good(self.state)
+                _, tree, manifest = mgr.restore_latest_good(
+                    self.state, backend=self.backend)
             except FileNotFoundError:
                 print(f"[train] divergence ({reason}) and no healthy "
                       "checkpoint to roll back to — stopping", flush=True)
@@ -197,6 +219,9 @@ class Trainer:
                 return None
             self.state = tree
             self.data.load_state_dict(manifest["extra"]["data"])
+            if self._stager is not None:
+                # staged-ahead batches predate the rewind — drop them
+                self._stager.reset()
         resume = int(manifest["extra"]["train_step"])
         self.sentinel_tripped = False
         self.rollbacks.append(
@@ -215,8 +240,12 @@ class Trainer:
             # module-global so the checkpoint writer (its own thread) sees
             # the crash points too
             chaos_lib.activate(self._chaos)
-        self.mcfg, self.tcfg, self.data = cfg.build()
-        mesh = make_host_mesh()
+        # backend first: distributed bring-up must precede ANY device query
+        # (mesh construction, data sharding, state init all depend on it)
+        self.backend.setup()
+        self.backend.check_consistent(cfg.config_hash())
+        self.mcfg, self.tcfg, self.data = cfg.build(backend=self.backend)
+        mesh = self.backend.mesh()
         run_step = steps_lib.make_run_step(self.mcfg, self.tcfg)
 
         history = HistoryBuffer(cap=tr.history_cap)
@@ -241,6 +270,10 @@ class Trainer:
                 self.state = steps_lib.init_train_state(
                     self.mcfg, self.tcfg, jax.random.PRNGKey(tr.seed),
                     tr.batch)
+                # every process computes the identical init (same PRNGKey);
+                # replicate makes it the backend's resident form (identity
+                # on local — bit-identical to the pre-backend loop)
+                self.state = self.backend.replicate(self.state)
                 self.num_params = sum(
                     int(np.prod(l.shape)) for l in
                     jax.tree_util.tree_leaves(self.state["params"]))
@@ -248,7 +281,16 @@ class Trainer:
                 # hooks may restore state + data-pipeline position
                 # (checkpoint resume); the iterator is created only after
                 self._fire("on_train_start")
-                it = iter(self.data)
+                it = None
+                if self._chaos is not None:
+                    # chaos corrupts HOST batches per step — keep the plain
+                    # pull→corrupt→stage path (no lookahead) so injection
+                    # sees the batch before it leaves the host
+                    it = iter(self.data)
+                else:
+                    self._stager = BatchStager(
+                        self.data, self.backend.shard_batch,
+                        depth=self.backend.staging_depth)
                 t_start = time.time()
                 with contextlib.ExitStack() as audit_scope:
                     if audit_guard is not None:
@@ -260,12 +302,11 @@ class Trainer:
                     while step < tr.steps:
                         if self._chaos is not None:
                             self._chaos.fire_signals(step)
-                        batch_np = next(it)
-                        if self._chaos is not None:
                             batch_np = self._chaos.corrupt_batch(
-                                step, batch_np)
-                        batch = {k: jnp.asarray(v)
-                                 for k, v in batch_np.items()}
+                                step, next(it))
+                            batch = self.backend.shard_batch(batch_np)
+                        else:
+                            batch = next(self._stager)
                         if watcher is not None:
                             drift = watcher.observe(step=step,
                                                     state=self.state,
@@ -357,5 +398,9 @@ class Trainer:
             if self._chaos is not None:
                 chaos_lib.deactivate()
                 self._chaos = None
+            if self._stager is not None:
+                self._stager.close()
+                self._stager = None
             if self.device_clock is not None:
                 self.device_clock.close()
+            self.backend.teardown()

@@ -1,0 +1,36 @@
+"""Pluggable execution backends (see ``repro.backend.base``).
+
+Importing this package registers both shipped backends; ``resolve`` turns
+the tagged ``backend`` config section into a live :class:`Backend`.
+"""
+from repro.backend.base import (
+    AllReduceSpec,
+    Backend,
+    BackendEntry,
+    LocalBackendConfig,
+    MultiProcessBackendConfig,
+    available_backends,
+    backend_name_of,
+    entry_for_config,
+    get_backend,
+    register_backend,
+    resolve,
+)
+from repro.backend.local import LocalBackend
+from repro.backend.multiprocess import MultiProcessBackend
+
+__all__ = [
+    "AllReduceSpec",
+    "Backend",
+    "BackendEntry",
+    "LocalBackend",
+    "LocalBackendConfig",
+    "MultiProcessBackend",
+    "MultiProcessBackendConfig",
+    "available_backends",
+    "backend_name_of",
+    "entry_for_config",
+    "get_backend",
+    "register_backend",
+    "resolve",
+]

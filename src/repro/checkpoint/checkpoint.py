@@ -89,31 +89,39 @@ class CheckpointManager:
                     os.rename(path, final)
 
     # ------------------------------ save --------------------------------
-    def save(self, step: int, tree: PyTree, extra: Optional[Dict] = None) -> str:
+    def save(self, step: int, tree: PyTree, extra: Optional[Dict] = None,
+             topology: Optional[Dict] = None) -> str:
+        """``topology`` (``Backend.topology()``: process/device counts +
+        shard layout) is stamped into the manifest — what lets ``restore``
+        detect a mismatched restart and reshard instead of mis-restoring."""
         self.wait()                               # one in-flight save max
         # materialize on host BEFORE handing to the writer thread
         flat = _flatten_with_paths(tree)
         if self.async_save:
             self._thread = threading.Thread(
-                target=self._write_guarded, args=(step, flat, extra or {}),
+                target=self._write_guarded,
+                args=(step, flat, extra or {}, topology),
                 daemon=False)
             self._thread.start()
             return os.path.join(self.directory, f"step_{step:08d}")
-        return self._write(step, flat, extra or {})
+        return self._write(step, flat, extra or {}, topology)
 
-    def _write_guarded(self, step, flat, extra) -> None:
+    def _write_guarded(self, step, flat, extra, topology=None) -> None:
         """Writer-thread wrapper: a dead writer must not pass silently —
         its exception is re-raised from the next :meth:`wait`."""
         try:
-            self._write(step, flat, extra)
+            self._write(step, flat, extra, topology)
         except BaseException as e:          # noqa: BLE001 — surfaced later
             self._async_exc = e
 
-    def _write(self, step: int, flat: Dict[str, np.ndarray], extra: Dict) -> str:
+    def _write(self, step: int, flat: Dict[str, np.ndarray], extra: Dict,
+               topology: Optional[Dict] = None) -> str:
         final = os.path.join(self.directory, f"step_{step:08d}")
         tmp = os.path.join(self.directory, f"tmp.{step}.{os.getpid()}")
         os.makedirs(tmp, exist_ok=True)
         manifest = {"step": step, "extra": extra, "leaves": {}}
+        if topology is not None:
+            manifest["topology"] = topology
         for key, arr in flat.items():
             fname = re.sub(r"[^A-Za-z0-9_.-]", "_", key) + ".npy"
             logical_dtype = str(arr.dtype)
@@ -193,13 +201,39 @@ class CheckpointManager:
 
     def restore(self, step: int, target: PyTree,
                 sharding_tree: Optional[PyTree] = None,
-                verify: bool = True) -> PyTree:
+                verify: bool = True, backend: Optional[Any] = None) -> PyTree:
         """Load into the structure of ``target``; if ``sharding_tree`` given,
-        device_put each leaf with its sharding (elastic re-shard on load)."""
+        device_put each leaf with its sharding (elastic re-shard on load).
+
+        ``backend`` (a ``repro.backend.Backend``) makes the restore ELASTIC:
+        leaves are placed with ``backend.device_put`` — arrays are stored
+        unsharded, so a checkpoint written on N processes/devices restores
+        onto M. A manifest topology stamp that disagrees with the live
+        topology is resharded (one log line) when a backend is given, and
+        raises an actionable error otherwise."""
         path = os.path.join(self.directory, f"step_{step:08d}")
         with open(os.path.join(path, "manifest.json")) as f:
             manifest = json.load(f)
         leaves = manifest["leaves"]
+        saved_topo = manifest.get("topology")
+        if saved_topo is not None:
+            live_topo = backend.topology() if backend is not None else None
+            if live_topo is not None and live_topo != saved_topo:
+                print(f"[ckpt] step {step} written on topology {saved_topo}, "
+                      f"restoring onto {live_topo} — resharding", flush=True)
+            elif live_topo is None and sharding_tree is None:
+                import jax as _jax
+                here = {"process_count": _jax.process_count(),   # lint: allow
+                        "device_count": len(_jax.devices()),     # lint: allow
+                        "shard_layout": saved_topo.get("shard_layout",
+                                                       "replicated")}
+                if here != saved_topo:
+                    raise ValueError(
+                        f"checkpoint step {step} was written on topology "
+                        f"{saved_topo} but this process sees {here} — pass "
+                        "backend=<trainer.backend> (or a sharding_tree) to "
+                        "reshard elastically, or restart on the original "
+                        "topology")
 
         flat_target, treedef = jax.tree_util.tree_flatten_with_path(target)
         flat_shardings = (jax.tree_util.tree_leaves(
@@ -213,7 +247,10 @@ class CheckpointManager:
                     # state sections added after this checkpoint was written
                     # (the divergence sentinel, the Sampler-v2 carry): keep
                     # the freshly-initialized leaf instead of failing
-                    out.append(jax.device_put(np.asarray(leaf)))
+                    fresh = np.asarray(leaf)
+                    out.append(backend.device_put(fresh)
+                               if backend is not None
+                               else jax.device_put(fresh))
                     continue
                 raise KeyError(f"checkpoint missing leaf '{key}'")
             meta = leaves[key]
@@ -227,12 +264,15 @@ class CheckpointManager:
                                  f"ckpt {arr.shape} vs target {leaf.shape}")
             if shard is not None:
                 out.append(jax.device_put(arr, shard))
+            elif backend is not None:
+                out.append(backend.device_put(arr))
             else:
                 out.append(jax.device_put(arr))
         return jax.tree_util.tree_unflatten(treedef, out)
 
     def restore_latest_good(self, target: PyTree,
-                            sharding_tree: Optional[PyTree] = None):
+                            sharding_tree: Optional[PyTree] = None,
+                            backend: Optional[Any] = None):
         """Restore the newest checkpoint that is both intact (checksums
         verify) and stamped healthy, walking newest→oldest. Corrupt dirs
         are quarantined to ``corrupt.<step>`` (kept for forensics, skipped
@@ -250,7 +290,8 @@ class CheckpointManager:
                 print(f"[ckpt] step {step} stamped unhealthy — skipping")
                 continue
             try:
-                tree = self.restore(step, target, sharding_tree, verify=True)
+                tree = self.restore(step, target, sharding_tree, verify=True,
+                                    backend=backend)
             except (OSError, ValueError, KeyError) as e:
                 print(f"[ckpt] step {step} failed verification ({e}) — "
                       "quarantining")

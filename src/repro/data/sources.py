@@ -146,6 +146,27 @@ def build_source(dcfg: Any) -> DataSourceBase:
     return entry_for_config(dcfg).build(dcfg)
 
 
+def shard_for_backend(dcfg: Any, backend: Any) -> Any:
+    """This process's host-shard view of a rank-agnostic ``data`` section.
+
+    Every source config carries ``num_hosts``/``host_index``; the backend's
+    ``data_shard()`` (process_count, process_index) fills them at BUILD time
+    only — the stored/serialized section stays rank-agnostic so all
+    processes hash identically and checkpoints restore on any topology.
+    Per-global-example seeding makes the union of the shards byte-identical
+    to a single-host run."""
+    num_hosts, host_index = backend.data_shard()
+    if (num_hosts, host_index) == (dcfg.num_hosts, dcfg.host_index):
+        return dcfg
+    if dcfg.global_batch % num_hosts != 0:
+        raise ValueError(
+            f"global batch {dcfg.global_batch} does not divide over "
+            f"{num_hosts} processes — pick train.batch divisible by the "
+            "process count")
+    return dataclasses.replace(dcfg, num_hosts=num_hosts,
+                               host_index=host_index)
+
+
 # ---------------------------------------------------------------------------
 # synthetic_lm (the original pipeline, unchanged semantics)
 # ---------------------------------------------------------------------------

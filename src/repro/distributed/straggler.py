@@ -23,8 +23,10 @@ class StragglerConfig:
 
 
 class StragglerMonitor:
-    def __init__(self, cfg: Optional[StragglerConfig] = None):
+    def __init__(self, cfg: Optional[StragglerConfig] = None,
+                 process_index: int = 0):
         self.cfg = cfg if cfg is not None else StragglerConfig()
+        self.process_index = process_index
         self.ema: Optional[float] = None
         self.count = 0
         self.flagged: List[int] = []
@@ -54,6 +56,7 @@ class StragglerMonitor:
 
     def summary(self) -> Dict[str, float]:
         return {
+            "process_index": self.process_index,
             "steps": self.count,
             "flagged": len(self.flagged),
             "ema_s": self.ema or 0.0,
@@ -61,3 +64,19 @@ class StragglerMonitor:
                       if self._history else 0.0),
             "max_s": max(self._history) if self._history else 0.0,
         }
+
+
+def merge_summaries(summaries: List[Dict[str, float]]) -> Dict[str, float]:
+    """Fleet view from per-process monitor summaries: the coordinator's
+    mitigation decision keys on the WORST host, so attribute it."""
+    if not summaries:
+        return {"processes": 0, "flagged_total": 0, "worst_process": -1,
+                "worst_ema_s": 0.0, "max_s": 0.0}
+    worst = max(summaries, key=lambda s: s.get("ema_s", 0.0))
+    return {
+        "processes": len(summaries),
+        "flagged_total": int(sum(s.get("flagged", 0) for s in summaries)),
+        "worst_process": int(worst.get("process_index", 0)),
+        "worst_ema_s": float(worst.get("ema_s", 0.0)),
+        "max_s": float(max(s.get("max_s", 0.0) for s in summaries)),
+    }

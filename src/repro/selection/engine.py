@@ -159,6 +159,15 @@ def select_multi_batch(cfg: GraftConfig, sampler: SamplerLike, V: jax.Array,
 # shard_map data-parallel selection
 # ---------------------------------------------------------------------------
 
+def _as_mesh(mesh_or_backend) -> Mesh:
+    """Accept a ``repro.backend.Backend`` anywhere a mesh is expected —
+    callers holding a backend shouldn't have to know it owns a mesh."""
+    if isinstance(mesh_or_backend, Mesh):
+        return mesh_or_backend
+    getter = getattr(mesh_or_backend, "mesh", None)
+    return getter() if callable(getter) else mesh_or_backend
+
+
 def _batch_axes(mesh: Mesh, batch_logical: str, rules):
     """Mesh axis names the logical rule table maps ``batch_logical`` to."""
     entry = tuple(sh.logical_to_spec((batch_logical,), mesh, rules))[0]
@@ -189,7 +198,8 @@ def make_sharded_selector(cfg: GraftConfig, mesh: Mesh, *,
     """
     smp = registry.get_sampler(sampler)
     rules_key = tuple(sorted(rules.items())) if rules else None
-    return _sharded_selector_cached(cfg, smp, mesh, batch_logical, rules_key)
+    return _sharded_selector_cached(cfg, smp, _as_mesh(mesh), batch_logical,
+                                    rules_key)
 
 
 @functools.lru_cache(maxsize=64)
@@ -293,6 +303,7 @@ def select_sharded(cfg: GraftConfig, mesh: Mesh, V: jax.Array, G: jax.Array,
                    scores: Optional[jax.Array] = None, carry: Carry = None,
                    step=0, batch_logical: str = "act_batch", rules=None):
     """One-shot convenience over :func:`make_sharded_selector`."""
+    mesh = _as_mesh(mesh)
     _, axes = _batch_axes(mesh, batch_logical, rules)
     n_shards = 1
     for a in axes:

@@ -1,13 +1,37 @@
 import os
+import subprocess
 import sys
+import textwrap
 
 # tests see the real (single) CPU device — the 512-device override belongs
 # ONLY to repro.launch.dryrun (see that module's header).
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+sys.path.insert(0, SRC)
 sys.path.insert(0, os.path.dirname(__file__))   # hypothesis_compat import
 
 import numpy as np
 import pytest
+
+
+def run_forced_devices(code: str, devices: int = 4, timeout: int = 480,
+                       env_extra=None) -> str:
+    """Run ``code`` in a FRESH python with N forced CPU devices.
+
+    The XLA device count is fixed at backend init, so multi-device CPU
+    tests cannot run in the pytest process — this is the one shared
+    subprocess recipe (selection shard_map, sampler-v2 conformance,
+    dry-run, and backend elastic-resume tests all use it). Returns stdout;
+    asserts a zero exit with the subprocess stderr tail on failure."""
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}",
+               PYTHONPATH=SRC)
+    if env_extra:
+        env.update(env_extra)
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=timeout)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
 
 
 def pytest_addoption(parser):

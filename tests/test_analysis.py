@@ -282,6 +282,26 @@ def test_lint_flags_pallas_call_outside_kernels():
     assert lint.lint_source(_BAD_PALLAS, "kernels/mine.py") == []
 
 
+_BAD_TOPOLOGY = """
+import jax
+from jax.sharding import Mesh
+
+def f(devices):
+    jax.distributed.initialize("127.0.0.1:1", 2, 0)
+    m1 = jax.make_mesh((2,), ("data",))
+    m2 = Mesh(devices, ("data",))
+    return jax.process_index(), jax.process_count()
+"""
+
+
+def test_lint_flags_topology_outside_backend():
+    findings = lint.lint_source(_BAD_TOPOLOGY, "api/trainer.py")
+    assert [f.rule for f in findings] == ["LN004"] * 5
+    # the backend package and the mesh helpers own topology
+    assert lint.lint_source(_BAD_TOPOLOGY, "backend/multiprocess.py") == []
+    assert lint.lint_source(_BAD_TOPOLOGY, "launch/mesh.py") == []
+
+
 def test_lint_allow_marker_whitelists_line():
     src = ("import jax\n"
            "def f(x):\n"

@@ -1,32 +1,18 @@
 """Distributed machinery: logical-axis rules, dry-run smoke (8 fake devices
 via subprocess — the 512-device override belongs only to dryrun), collective
 parsing, multi-device compression."""
-import json
-import os
-import subprocess
-import sys
-import textwrap
-
 import numpy as np
 import jax
 import pytest
 
 from jax.sharding import Mesh, PartitionSpec as P
 
+from conftest import run_forced_devices
 from repro.distributed import sharding as sh
-
-SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 
 def run_py(code: str, devices: int = 8, timeout: int = 480) -> str:
-    env = dict(os.environ,
-               XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}",
-               PYTHONPATH=SRC)
-    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
-                         capture_output=True, text=True, env=env,
-                         timeout=timeout)
-    assert out.returncode == 0, out.stderr[-3000:]
-    return out.stdout
+    return run_forced_devices(code, devices=devices, timeout=timeout)
 
 
 class TestShardingRules:

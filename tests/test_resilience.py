@@ -479,6 +479,8 @@ def test_checkpoint_callback_refuses_save_while_tripped(tmp_path):
     t.sentinel_tripped = True
     t.should_stop = False
     t.config = ExperimentConfig().apply_overrides(["train.steps=4"])
+    from repro import backend as backend_lib
+    t.backend = backend_lib.resolve(None)
     cb.on_step_end(t, 0, MetricsFuture({"loss": jnp.float32(1.0)}))
     assert cb.manager.all_steps() == []
 

@@ -2,21 +2,16 @@
 multi-batch == single-batch loop, shard_map data-parallel == single-device
 reference, core.graft compatibility shim."""
 import dataclasses
-import os
-import subprocess
-import sys
-import textwrap
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
 
+from conftest import run_forced_devices
 from repro.selection import (GraftConfig, Sampler, SelectionInputs,
                              SelectionState, available, engine, get_sampler,
                              init_state, register)
-
-SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 CFG = GraftConfig(rset=(2, 4, 8), eps=0.25)
 
@@ -258,10 +253,7 @@ class TestShardedSelection:
         backend init): every shard holds a replica of the same batch; the
         sharded path must reproduce the single-device pivots per shard and
         the psum'd global rank decision must equal the single-device one."""
-        env = dict(os.environ,
-                   XLA_FLAGS="--xla_force_host_platform_device_count=4",
-                   PYTHONPATH=SRC)
-        code = textwrap.dedent("""
+        code = """
             import numpy as np, jax, jax.numpy as jnp
             from repro.selection import GraftConfig, engine
             assert len(jax.devices()) == 4
@@ -287,11 +279,8 @@ class TestShardedSelection:
             np.testing.assert_allclose(np.asarray(sharded.weights).sum(), 1.0,
                                        atol=1e-5)
             print("SHARDED_OK")
-        """)
-        out = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                             text=True, env=env, timeout=480)
-        assert out.returncode == 0, out.stderr[-3000:]
-        assert "SHARDED_OK" in out.stdout
+        """
+        assert "SHARDED_OK" in run_forced_devices(code, devices=4)
 
 
 class TestSamplerV2Conformance:
@@ -382,10 +371,7 @@ class TestSamplerV2Conformance:
         """Every registered sampler runs under the sharded selector on a
         forced-4-device CPU mesh and round-trips its carry (fresh subprocess:
         device count is fixed at backend init)."""
-        env = dict(os.environ,
-                   XLA_FLAGS="--xla_force_host_platform_device_count=4",
-                   PYTHONPATH=SRC)
-        code = textwrap.dedent("""
+        code = """
             import numpy as np, jax, jax.numpy as jnp
             from repro.selection import GraftConfig, available, engine, get_sampler
             assert len(jax.devices()) == 4
@@ -415,11 +401,8 @@ class TestSamplerV2Conformance:
                 if not smp.stateful:
                     assert not jax.tree_util.tree_leaves(carry), name
             print("CONFORMANCE_OK")
-        """)
-        out = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                             text=True, env=env, timeout=480)
-        assert out.returncode == 0, out.stderr[-3000:]
-        assert "CONFORMANCE_OK" in out.stdout
+        """
+        assert "CONFORMANCE_OK" in run_forced_devices(code, devices=4)
 
 
 class TestStreamingGraft:
